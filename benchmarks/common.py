@@ -1,0 +1,65 @@
+"""Shared benchmark machinery. IMPORTANT: import this module FIRST in every
+benchmark (it pins the CPU device count before jax initializes)."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+N_DEVICES = int(os.environ.get("BENCH_DEVICES", "8"))
+if "jax" not in sys.modules:
+    os.environ.setdefault(
+        "XLA_FLAGS", f"--xla_force_host_platform_device_count={N_DEVICES}")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+
+def timeit(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall seconds of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+_rows = []
+
+
+def emit(bench: str, case: str, **metrics):
+    parts = [f"{k}={v:.6g}" if isinstance(v, float) else f"{k}={v}"
+             for k, v in metrics.items()]
+    line = f"{bench},{case}," + ",".join(parts)
+    print(line, flush=True)
+    _rows.append({"bench": bench, "case": case, **metrics})
+
+
+def rows():
+    return list(_rows)
+
+
+def peak_flops_cpu(n: int = 1024) -> float:
+    """Measured f32 matmul peak of this container (for table4 utilization)."""
+    import jax.numpy as jnp
+    a = jnp.ones((n, n), jnp.float32)
+    f = jax.jit(lambda a: a @ a)
+    t = timeit(f, a, iters=3, warmup=2)
+    return 2 * n ** 3 / t
+
+
+def make_dense_vector(n: int, density: float, sr, seed: int = 0):
+    """Vector with the given nonzero density in the semiring's domain."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    nz = rng.random(n) < density
+    if sr.name == "min_plus":
+        x = np.where(nz, rng.random(n).astype(np.float32), np.inf)
+    elif sr.name == "bool_or_and":
+        x = nz.astype(np.int32)
+    else:
+        x = np.where(nz, rng.random(n).astype(np.float32), 0.0).astype(np.float32)
+    return jnp.asarray(x, sr.dtype)

@@ -1,0 +1,79 @@
+"""Fig 4: per-iteration execution time + frontier density for BFS and SSSP
+under SpMV-only vs SpMSpV-only policies — the crossover that motivates
+adaptive switching (§4.2).
+"""
+from benchmarks import common  # noqa: F401
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.semiring import BOOL_OR_AND, MIN_PLUS
+from repro.graphs.cost_model import trained_stump
+from repro.graphs.datasets import generate, largest_component_source
+from repro.graphs.engine import build_engine, density_of
+
+
+def _trace(engine, x0, visited0, sr, max_iters, update):
+    """Python-level iteration loop so each level is timed separately."""
+    import jax
+    spmv = jax.jit(engine.spmv_fn)
+    spmspv = jax.jit(engine.spmspv_fn)
+    x, visited = x0, visited0
+    rows = []
+    for it in range(max_iters):
+        dens = float(density_of(x, sr, engine.n_true))
+        if dens == 0.0:
+            break
+        t_mv = timeit(spmv, x, iters=3, warmup=1)
+        t_msv = timeit(spmspv, x, iters=3, warmup=1)
+        y = spmv(x)
+        x, visited, done = update(y, x, visited)
+        rows.append((it, dens, t_mv, t_msv))
+        if done:
+            break
+    return rows
+
+
+def run(quick: bool = False):
+    stump = trained_stump()
+    datasets = ["A302", "r-TX"] if not quick else ["A302"]
+    for ds in datasets:
+        g = generate(ds, scale=0.05, seed=0)
+        src = largest_component_source(g)
+
+        # BFS trace
+        eng = build_engine(g, BOOL_OR_AND, stump)
+        sr = BOOL_OR_AND
+        x0 = jnp.zeros((eng.n,), sr.dtype).at[src].set(1)
+        vis0 = jnp.zeros((eng.n,), jnp.int32).at[src].set(1)
+
+        def bfs_update(y, x, visited):
+            nf = jnp.where((y != 0) & (visited == 0), 1, 0).astype(sr.dtype)
+            visited = jnp.where(nf != 0, 1, visited)
+            return nf, visited, bool(jnp.sum(nf) == 0)
+
+        for it, dens, t_mv, t_msv in _trace(eng, x0, vis0, sr, 32, bfs_update):
+            emit("fig4", f"{ds}/bfs/it{it}", density=dens,
+                 spmv_ms=t_mv * 1e3, spmspv_ms=t_msv * 1e3,
+                 threshold=eng.threshold)
+
+        # SSSP trace (min-plus relaxation rounds)
+        eng = build_engine(g, MIN_PLUS, stump, weighted=True)
+        sr = MIN_PLUS
+        d0 = jnp.full((eng.n,), jnp.inf, sr.dtype).at[src].set(0.0)
+
+        def sssp_update(y, x, dist):
+            new_d = jnp.minimum(dist, y)
+            frontier = jnp.where(new_d < dist, new_d, jnp.inf)
+            return frontier, new_d, bool(jnp.all(new_d >= dist))
+
+        for it, dens, t_mv, t_msv in _trace(
+                eng, d0, d0, sr, 16 if quick else 24, sssp_update):
+            emit("fig4", f"{ds}/sssp/it{it}", density=dens,
+                 spmv_ms=t_mv * 1e3, spmspv_ms=t_msv * 1e3,
+                 threshold=eng.threshold)
+
+
+if __name__ == "__main__":
+    run()

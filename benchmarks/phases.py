@@ -1,0 +1,164 @@
+"""Per-phase (Load / Kernel / Retrieve+Merge) closures for the distributed
+engine — the paper's four-phase accounting (Figs 2, 5, 6, 8).
+
+Each phase is its own jitted shard_map so it can be timed in isolation; the
+e2e closure is the production `make_distributed_matvec` path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.distributed import (
+    _local_matvec, _op_reduce_scatter, make_distributed_matvec,
+    vec_to_2d_layout,
+)
+from repro.core.partition import PartitionedMatrix, partition, shard_vector
+from repro.core.semiring import Semiring
+
+
+def build_phase_fns(mesh: Mesh, pm: PartitionedMatrix, sr: Semiring,
+                    strategy: str, kernel: str, f_local: int | None = None):
+    """dict of jitted fns keyed by phase; each takes the same (parts, xs).
+    ``f_local`` switches SpMSpV to the paper's compressed Load (the frontier
+    crosses the fabric instead of the dense vector)."""
+    ar, ac = "dr", "dc"
+    flat = (ar, ac)
+    d = pm.n_devices
+    a_specs = jax.tree.map(lambda _: P(flat), pm.parts)
+    strip = lambda t: jax.tree.map(lambda x: x[0], t)
+    fns = {}
+
+    if strategy == "row":
+        load = shard_map(
+            lambda x: jax.lax.all_gather(x, flat, tiled=True).reshape(-1)[None],
+            mesh=mesh, in_specs=P(flat), out_specs=P(flat), check_rep=False)
+
+        def kern(parts, x_full):
+            return _local_matvec(strip(parts), x_full[0], sr, kernel, "auto")[None]
+
+        kern_sm = shard_map(kern, mesh=mesh, in_specs=(a_specs, P(flat)),
+                            out_specs=P(flat), check_rep=False)
+        fns["load"] = jax.jit(lambda parts, xs: load(xs))
+        fns["kernel"] = jax.jit(
+            lambda parts, xs, xf: kern_sm(parts, xf))
+        fns["retrieve_merge"] = None        # row-wise: output stays sharded
+
+    elif strategy == "col":
+        def kern(parts, x):
+            return _local_matvec(strip(parts), x[0], sr, kernel, "auto")[None]
+
+        kern_sm = shard_map(kern, mesh=mesh, in_specs=(a_specs, P(flat)),
+                            out_specs=P(flat), check_rep=False)
+        rm = shard_map(
+            lambda y: _op_reduce_scatter(y[0], sr, flat, d)[None],
+            mesh=mesh, in_specs=P(flat), out_specs=P(flat), check_rep=False)
+        fns["load"] = None                  # input already sharded
+        fns["kernel"] = jax.jit(lambda parts, xs, _xf: kern_sm(parts, xs))
+        fns["retrieve_merge"] = jax.jit(lambda parts, ys: rm(ys))
+
+    elif strategy == "2d":
+        r_parts, c_parts = pm.grid
+        reshape_parts = lambda parts: jax.tree.map(
+            lambda v: v.reshape((r_parts, c_parts) + v.shape[1:]), parts)
+        a2 = jax.tree.map(lambda _: P((ar,), (ac,)), pm.parts)
+
+        load = shard_map(
+            lambda x: jax.lax.all_gather(x[0, 0], ar, tiled=True)[None, None],
+            mesh=mesh, in_specs=P(ar, ac), out_specs=P(ar, ac), check_rep=False)
+
+        def kern(parts, xc):
+            a_local = strip(strip(parts))
+            return _local_matvec(a_local, xc[0, 0], sr, kernel, "auto")[None, None]
+
+        kern_sm = shard_map(kern, mesh=mesh, in_specs=(a2, P(ar, ac)),
+                            out_specs=P(ar, ac), check_rep=False)
+        rm = shard_map(
+            lambda y: _op_reduce_scatter(y[0, 0], sr, ac, c_parts)[None, None],
+            mesh=mesh, in_specs=P(ar, ac), out_specs=P(ar, ac), check_rep=False)
+
+        fns["load"] = jax.jit(
+            lambda parts, xs: load(vec_to_2d_layout(xs, pm.grid)))
+        fns["kernel"] = jax.jit(
+            lambda parts, xs, xf: kern_sm(reshape_parts(parts), xf))
+        fns["retrieve_merge"] = jax.jit(lambda parts, ys: rm(ys))
+    else:
+        raise ValueError(strategy)
+
+    fns["e2e"] = jax.jit(make_distributed_matvec(mesh, pm, sr, strategy,
+                                                 kernel=kernel,
+                                                 f_local=f_local))
+    if f_local is not None and strategy in ("row", "2d"):
+        # compressed Load: time the per-shard compress + frontier gather
+        from repro.core.distributed import gather_frontier
+        axis = flat if strategy == "row" else ar
+
+        def c_load(x):
+            f = gather_frontier(x[0] if strategy == "row" else x[0, 0],
+                                sr, f_local, axis)
+            lead = ((None,) if strategy == "row" else (None, None))
+            idx = f.indices[lead]
+            val = f.values[lead]
+            return idx, val
+
+        spec = P(flat) if strategy == "row" else P(ar, ac)
+
+        def pre(xs):
+            return xs if strategy == "row" else vec_to_2d_layout(xs, pm.grid)
+
+        loader = shard_map(c_load, mesh=mesh, in_specs=spec,
+                           out_specs=(spec, spec), check_rep=False)
+        fns["load"] = jax.jit(lambda parts, xs: loader(pre(xs)))
+        fns["kernel"] = None          # folded into e2e - load (derived)
+    return fns
+
+
+def phase_times(mesh, pm, sr, strategy, kernel, xs, timeit,
+                f_local: int | None = None):
+    """Measure Load / Kernel / Retrieve+Merge / e2e (seconds)."""
+    fns = build_phase_fns(mesh, pm, sr, strategy, kernel, f_local=f_local)
+    out = {}
+    xf = None
+    if fns["load"] is not None:
+        out["load"] = timeit(fns["load"], pm.parts, xs)
+        if fns["kernel"] is not None:
+            xf = fns["load"](pm.parts, xs)
+    else:
+        out["load"] = 0.0
+        xf = xs
+    out["e2e"] = timeit(fns["e2e"], pm.parts, xs)
+    if fns["kernel"] is not None:
+        out["kernel"] = timeit(fns["kernel"], pm.parts, xs, xf)
+        ys = fns["kernel"](pm.parts, xs, xf)
+        if fns["retrieve_merge"] is not None:
+            out["retrieve_merge"] = timeit(fns["retrieve_merge"], pm.parts, ys)
+        else:
+            out["retrieve_merge"] = 0.0
+    else:
+        out["retrieve_merge"] = 0.0
+        out["kernel"] = max(out["e2e"] - out["load"], 0.0)
+    return out
+
+
+def prep(graph, sr, grid, fmt, weighted=False, normalize=False, seed=0,
+         block=(16, 16)):
+    """Partition a graph's transposed adjacency. The global shape is padded
+    to a multiple of 64 so every grid x device-count combination divides."""
+    from repro.graphs.engine import edge_values
+    vals = edge_values(graph, sr, weighted, seed, normalize)
+    rows, cols = graph.cols.astype(np.int32), graph.rows.astype(np.int32)
+    n_pad = -(-graph.n // 64) * 64
+    pm = partition(rows, cols, vals, (n_pad, n_pad), grid, fmt, sr,
+                   block=block)
+    return pm
+
+
+def shard_x(x_np: np.ndarray, pm: PartitionedMatrix, sr: Semiring):
+    fill = np.inf if sr.name == "min_plus" else 0
+    n_pad = pm.shape[1]
+    xp = np.full(n_pad, fill, dtype=np.asarray(x_np).dtype)
+    xp[: x_np.shape[0]] = x_np
+    return jnp.asarray(xp.reshape(pm.n_devices, -1), sr.dtype)

@@ -1,0 +1,108 @@
+"""Roofline aggregation (deliverable g): reads experiments/dryrun/*.json and
+prints the per-(arch x shape x mesh) three-term table, flags the dominant
+bottleneck, and nominates hillclimb cells (worst roofline fraction / most
+collective-bound / most paper-representative).
+"""
+import argparse
+import glob
+import json
+import os
+
+
+def load(dirpath: str):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def fraction(rec) -> float:
+    """Useful-compute fraction of the bound: model_flops/peak vs bound_s."""
+    r = rec["roofline"]
+    ideal = rec["model_flops_per_device"] / 197e12
+    return ideal / r["bound_s"] if r["bound_s"] else 0.0
+
+
+def table(recs, mesh="single"):
+    rows = []
+    for rec in recs:
+        mk = "multi" if rec["mesh"].get("pod") else "single"
+        if mk != mesh:
+            continue
+        r = rec["roofline"]
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"],
+            "compute_ms": r["compute_s"] * 1e3,
+            "memory_ms": r["memory_s"] * 1e3,
+            "collective_ms": r["collective_s"] * 1e3,
+            "dominant": r["dominant"],
+            "bound_ms": r["bound_s"] * 1e3,
+            "roofline_frac": fraction(rec),
+            "useful_ratio": rec.get("useful_flops_ratio") or 0.0,
+        })
+    rows.sort(key=lambda x: (x["arch"], x["shape"]))
+    return rows
+
+
+def markdown(rows):
+    out = ["| arch | shape | compute ms | memory ms | collective ms | "
+           "dominant | roofline frac | model/HLO flops |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_ms']:.2f} | "
+            f"{r['memory_ms']:.2f} | {r['collective_ms']:.2f} | "
+            f"{r['dominant']} | {r['roofline_frac']:.3f} | "
+            f"{r['useful_ratio']:.3f} |")
+    return "\n".join(out)
+
+
+def nominate(rows):
+    """Worst roofline fraction, most collective-bound, plus the paper cell
+    (the graph engine itself is benchmarked separately — among LM cells the
+    most representative is the MoE dispatch = sparse-matvec analogue)."""
+    active = [r for r in rows if r["bound_ms"] > 0]
+    worst = min(active, key=lambda r: r["roofline_frac"])
+    coll = max(active, key=lambda r: r["collective_ms"] / max(r["bound_ms"], 1e-12))
+    moe = [r for r in active if r["arch"].startswith(("deepseek-v2", "mixtral"))]
+    rep = max(moe, key=lambda r: r["bound_ms"]) if moe else worst
+    return {"worst_fraction": worst, "most_collective": coll,
+            "paper_representative": rep}
+
+
+def run(quick: bool = False, dirpath: str = "experiments/dryrun"):
+    recs = load(dirpath)
+    if not recs:
+        print("roofline,none,no dryrun records found")
+        return
+    for mesh in ("single", "multi"):
+        rows = table(recs, mesh)
+        for r in rows:
+            print(f"roofline,{mesh}/{r['arch']}/{r['shape']},"
+                  f"compute_ms={r['compute_ms']:.3f},"
+                  f"memory_ms={r['memory_ms']:.3f},"
+                  f"collective_ms={r['collective_ms']:.3f},"
+                  f"dominant={r['dominant']},"
+                  f"frac={r['roofline_frac']:.4f}")
+    noms = nominate(table(recs, "single"))
+    for k, r in noms.items():
+        print(f"roofline,nominate/{k},arch={r['arch']},shape={r['shape']},"
+              f"frac={r['roofline_frac']:.4f},dominant={r['dominant']}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    if args.markdown:
+        print(markdown(table(recs, args.mesh)))
+    else:
+        run(dirpath=args.dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark driver: one module per paper table/figure + the roofline
+aggregation. ``python -m benchmarks.run [--quick] [--only fig7,...]``."""
+from benchmarks import common  # noqa: F401  (pins device count first)
+
+import argparse
+import time
+import traceback
+
+MODULES = [
+    "fig2_spmv_partitioning",
+    "fig4_density_trace",
+    "fig5_spmspv_variants",
+    "fig6_spmv_vs_spmspv",
+    "fig7_adaptive_e2e",
+    "fig8_scaling",
+    "table4_apps",
+    "sensitivity_switch",
+    "roofline",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module substrings")
+    args = ap.parse_args()
+
+    failures = []
+    for name in MODULES:
+        if args.only and not any(s in name for s in args.only.split(",")):
+            continue
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        print(f"### {name}", flush=True)
+        t0 = time.monotonic()
+        try:
+            mod.run(quick=args.quick)
+            print(f"### {name} done in {time.monotonic()-t0:.0f}s", flush=True)
+        except Exception as e:
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("### all benchmarks passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""§4.2.1 sensitivity: a +-10% error in the switch threshold must cost
+<5% total runtime on average (paper; A302 example: 60% vs 50% -> +2.5%).
+"""
+from benchmarks import common  # noqa: F401
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.semiring import BOOL_OR_AND
+from repro.graphs import bfs
+from repro.graphs.cost_model import trained_stump
+from repro.graphs.datasets import generate, largest_component_source
+from repro.graphs.engine import build_engine
+
+
+def run(quick: bool = False):
+    stump = trained_stump()
+    datasets = ["A302", "face"] if not quick else ["face"]
+    deltas = [-0.2, -0.1, 0.0, 0.1, 0.2]
+    for ds in datasets:
+        g = generate(ds, scale=0.05 if ds == "A302" else 0.3, seed=0)
+        src = largest_component_source(g)
+        eng0 = build_engine(g, BOOL_OR_AND, stump)
+        base = None
+        for dlt in deltas:
+            eng = dataclasses.replace(eng0, threshold=eng0.threshold + dlt)
+            f = jax.jit(lambda e=eng: bfs(e, src, policy="adaptive"))
+            t = timeit(f, iters=3, warmup=1)
+            if dlt == 0.0:
+                base = t
+        for dlt in deltas:
+            eng = dataclasses.replace(eng0, threshold=eng0.threshold + dlt)
+            f = jax.jit(lambda e=eng: bfs(e, src, policy="adaptive"))
+            t = timeit(f, iters=3, warmup=1)
+            emit("sensitivity", f"{ds}/thr{eng.threshold:+.2f}",
+                 total_ms=t * 1e3, delta_pct=(t / base - 1) * 100)
+
+
+if __name__ == "__main__":
+    run()

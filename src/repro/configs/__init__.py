@@ -1,0 +1,2 @@
+"""One config module per assigned architecture (exact published numbers)
+plus the paper's own graph-engine configuration (alpha_pim_graph)."""

@@ -1,0 +1,19 @@
+"""DeepSeek 7B [arXiv:2401.02954; hf] — llama-architecture dense LM.
+
+30L d_model=4096 32H (kv=32) d_ff=11008 vocab=102400."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="deepseek-7b",
+    family="dense",
+    n_layers=30,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=11008,
+    vocab=102400,
+    # full-MHA (kv=32) decode_32k cache: 2 TB bf16 = 8 GB/chip args + the
+    # CPU-lowering's f32 staging pushed the cell past HBM; int8 KV halves
+    # the cache (EXPERIMENTS.md §Perf)
+    kv_quant=True,
+)

@@ -1,0 +1,17 @@
+"""ALPHA-PIM core: semiring sparse linear algebra with adaptive kernel
+selection and mesh-partitioned execution (the paper's contribution)."""
+from repro.core.semiring import (  # noqa: F401
+    BOOL_OR_AND, MIN_PLUS, PLUS_TIMES, SEMIRINGS, Semiring,
+)
+from repro.core.formats import (  # noqa: F401
+    BSRMatrix, COOMatrix, CSCMatrix, CSRMatrix, PaddedBSR,
+    build_bsr, build_bsr_padded, build_coo, build_csc, build_csr,
+)
+from repro.core.spmv import spmv, spmv_bsr_ref, spmv_coo, spmv_csr  # noqa: F401
+from repro.core.spmspv import (  # noqa: F401
+    Frontier, frontier_from_dense, spmspv, spmspv_csc_gather, spmspv_csr_masked,
+)
+from repro.core.adaptive import (  # noqa: F401
+    DecisionStump, GraphFeatures, adaptive_matvec, fit_decision_stump,
+)
+from repro.core.partition import PartitionedMatrix, partition, shard_vector  # noqa: F401

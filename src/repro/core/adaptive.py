@@ -1,0 +1,111 @@
+"""Adaptive SpMSpV↔SpMV switching (paper §4.2).
+
+The paper's mechanism, kept verbatim because it is hardware-independent:
+
+1. Offline, a lightweight decision tree classifies the graph from two
+   features — average degree and degree std-dev — into *regular* or
+   *scale-free* (§4.2.1).
+2. The class fixes the switch threshold: regular ≈ 20% input-vector density,
+   scale-free ≈ 50%.
+3. At runtime the traversal monitors the frontier density each iteration and
+   switches from SpMSpV to SpMV once density exceeds the threshold. On UPMEM
+   the check ran on the host; here it is a `lax.cond` inside the jitted
+   `while_loop`, so the switch costs nothing.
+
+The tree is trained (fit_decision_stump) on a labelled synthetic corpus in
+graphs/cost_model.py; the fallback hand rule matches the paper's published
+classes exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+REGULAR_THRESHOLD = 0.20     # paper §4.2.1 observation ①
+SCALE_FREE_THRESHOLD = 0.50  # paper §4.2.1 observation ②
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphFeatures:
+    avg_degree: float
+    degree_std: float
+
+    @staticmethod
+    def from_degrees(deg: np.ndarray) -> "GraphFeatures":
+        return GraphFeatures(float(deg.mean()), float(deg.std()))
+
+
+@dataclasses.dataclass(frozen=True)
+class DecisionStump:
+    """Axis-aligned one-split tree over (avg_degree, degree_std).
+
+    Scale-free graphs have heavy-tailed degree distributions → large std
+    relative to mean. The learned split is on the coefficient of variation
+    (std / mean); the paper's two published classes are recovered when the
+    stump is fit on the synthetic corpus (tests assert this).
+    """
+
+    feature: str = "cv"          # "avg", "std" or "cv"
+    threshold: float = 1.0
+    left_class: str = "regular"  # feature <= threshold
+    right_class: str = "scale_free"
+
+    def classify(self, f: GraphFeatures) -> str:
+        val = {"avg": f.avg_degree, "std": f.degree_std,
+               "cv": f.degree_std / max(f.avg_degree, 1e-9)}[self.feature]
+        return self.left_class if val <= self.threshold else self.right_class
+
+    def switch_threshold(self, f: GraphFeatures) -> float:
+        return (REGULAR_THRESHOLD if self.classify(f) == "regular"
+                else SCALE_FREE_THRESHOLD)
+
+
+def fit_decision_stump(features: list[GraphFeatures], labels: list[str]) -> DecisionStump:
+    """Tiny CART: exhaustive search over the three 1-D features for the split
+    minimizing misclassification on the training corpus."""
+    feats = {
+        "avg": np.array([f.avg_degree for f in features]),
+        "std": np.array([f.degree_std for f in features]),
+        "cv": np.array([f.degree_std / max(f.avg_degree, 1e-9) for f in features]),
+    }
+    y = np.array([1 if l == "scale_free" else 0 for l in labels])
+    best = (np.inf, None)
+    for name, vals in feats.items():
+        cand = np.unique(vals)
+        thresholds = (cand[:-1] + cand[1:]) / 2 if cand.size > 1 else cand
+        for t in thresholds:
+            pred = (vals > t).astype(int)
+            err = np.minimum((pred != y).sum(), (1 - pred != y).sum())
+            if err < best[0]:
+                flip = (pred != y).sum() > (1 - pred != y).sum()
+                best = (err, DecisionStump(
+                    feature=name, threshold=float(t),
+                    left_class="scale_free" if flip else "regular",
+                    right_class="regular" if flip else "scale_free"))
+    assert best[1] is not None
+    return best[1]
+
+
+def select_kernel(density: Array, threshold: float) -> Array:
+    """0 = SpMSpV, 1 = SpMV (traced; used inside lax.cond/while_loop)."""
+    return (density > threshold).astype(jnp.int32)
+
+
+def adaptive_matvec(
+    spmspv_fn: Callable[[Array], Array],
+    spmv_fn: Callable[[Array], Array],
+    x_dense: Array,
+    density: Array,
+    threshold: float,
+) -> Array:
+    """One adaptive iteration: pick the kernel from the current density.
+    Both branches take/return the dense vector; the SpMSpV branch compresses
+    internally (Frontier is built inside, keeping the cond signature simple).
+    """
+    return jax.lax.cond(density > threshold, spmv_fn, spmspv_fn, x_dense)

@@ -1,0 +1,190 @@
+"""Distributed semiring SpMV/SpMSpV over a device mesh (paper §4.1.1 + §6.3).
+
+The paper's four-phase accounting survives intact, but UPMEM's host-mediated
+transfers become on-fabric collectives:
+
+    Load     : all-gather of the input vector onto the devices that need it
+    Kernel   : local semiring SpMV / SpMSpV (shard_map body)
+    Retrieve : moving partial outputs — here an all-to-all (⊕-reduce-scatter)
+    Merge    : the ⊕-reduction itself (psum / pmin / pmax in the semiring)
+
+Strategies (paper Fig. 3):
+    row   — A row-sharded over the full flat axis; Load = all-gather(x);
+            output lands sharded; no Retrieve/Merge.
+    col   — A col-sharded; no Load; Kernel emits full-length partials;
+            Retrieve+Merge = ⊕-reduce-scatter over the flat axis.
+    2d    — A tiled over (axis_r, axis_c); Load = all-gather(x) over axis_r
+            (x is sharded over axis_c, replicated over axis_r after gather);
+            Retrieve+Merge = ⊕-reduce-scatter over axis_c.
+
+Between traversal iterations, ``reshard_y_to_x`` converts the output layout
+into the next iteration's input layout — the paper's inter-iteration
+retrieve+reload through the host CPU, which on TPU is a collective permute.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.partition import PartitionedMatrix
+from repro.core.semiring import Semiring
+from repro.core.spmspv import Frontier, frontier_from_dense
+from repro.core.spmspv import spmspv as _spmspv
+from repro.core.spmv import spmv as _spmv
+
+Array = jax.Array
+
+
+def _op_reduce_scatter(x: Array, sr: Semiring, axis_name: str, axis_size: int) -> Array:
+    """⊕-reduce-scatter. XLA only fuses sum-reduce-scatter; generic semirings
+    use all_to_all (the Retrieve phase) followed by a local ⊕ (the Merge
+    phase), which is exactly the paper's retrieve-then-merge pipeline."""
+    if sr.collective == "psum":
+        return jax.lax.psum_scatter(x, axis_name, scatter_dimension=0, tiled=True)
+    # x: [M_local_out * axis_size] → split leading dim, exchange, local reduce.
+    m = x.shape[0] // axis_size
+    xs = x.reshape(axis_size, m)
+    exchanged = jax.lax.all_to_all(xs, axis_name, split_axis=0, concat_axis=0)
+    return sr.add_reduce(exchanged.reshape(axis_size, m), axis=0)
+
+
+def _local_matvec(a_local, x_full: Array, sr: Semiring, kernel: str, impl: str) -> Array:
+    if kernel == "spmv":
+        return _spmv(a_local, x_full, sr, impl=impl)
+    f = frontier_from_dense(x_full, sr)
+    return _spmspv(a_local, f, sr, impl=impl)
+
+
+def gather_frontier(x_local: Array, sr: Semiring, f_local: int,
+                    axis_name) -> Frontier:
+    """The paper's compressed Load phase: each shard compresses its slice of
+    the input vector to a (indices, values) frontier of capacity ``f_local``
+    and only THAT crosses the fabric — Load wire bytes drop from n_per to
+    2*f_local per peer, the SpMSpV load saving of §4.1/§6.2.
+
+    Capacity contract: a shard holding more than ``f_local`` nonzeros
+    truncates (callers size f_local from the density bound, exactly like the
+    paper sizes its DPU transfer buffers)."""
+    n_per = x_local.shape[0]
+    f = frontier_from_dense(x_local, sr, f_max=f_local)
+    idx_g = jax.lax.all_gather(f.indices, axis_name)     # [D, f] on the wire
+    val_g = jax.lax.all_gather(f.values, axis_name)
+    d = idx_g.shape[0]
+    offs = (jnp.arange(d, dtype=jnp.int32) * n_per)[:, None]
+    ok = idx_g < n_per                                   # pad index = n_per
+    gidx = jnp.where(ok, idx_g + offs, d * n_per).astype(jnp.int32)
+    return Frontier(gidx.reshape(-1), val_g.reshape(-1).astype(sr.dtype),
+                    jnp.sum(ok.astype(jnp.int32)), d * n_per)
+
+
+def make_distributed_matvec(
+    mesh: Mesh,
+    pm: PartitionedMatrix,
+    sr: Semiring,
+    strategy: str,
+    kernel: str = "spmv",
+    impl: str = "auto",
+    axis_names: Sequence[str] = ("dr", "dc"),
+    f_local: int | None = None,
+) -> Callable[[object, Array], Array]:
+    """Build `fn(parts, x_sharded) -> y_sharded` under shard_map.
+
+    x/y layout is the canonical flat one: [D, n_per] sharded over the flat
+    device axes, so iterative algorithms can feed y straight back in
+    (after reshard for 2d).
+
+    ``f_local`` (SpMSpV only) switches the Load phase to the paper's
+    compressed form: each shard all-gathers a capacity-``f_local`` frontier
+    instead of its dense slice (see gather_frontier).
+    """
+    ar, ac = axis_names
+    flat = (ar, ac)
+    r_parts, c_parts = pm.grid
+    d = pm.n_devices
+    compressed = f_local is not None and kernel == "spmspv"
+
+    a_specs = jax.tree.map(lambda _: P(flat), pm.parts)
+
+    def strip_lead(a_tree):
+        return jax.tree.map(lambda x: x[0], a_tree)
+
+    if strategy == "row":
+        def body(parts, x):
+            a_local = strip_lead(parts)
+            if compressed:
+                f = gather_frontier(x[0], sr, f_local, flat)       # Load
+                y = _spmspv(a_local, f, sr, impl=impl)             # Kernel
+            else:
+                x_full = jax.lax.all_gather(x, flat, tiled=True).reshape(-1)
+                y = _local_matvec(a_local, x_full, sr, kernel, impl)
+            return y[None]  # already row-sharded; no Retrieve/Merge
+
+        in_specs = (a_specs, P(flat))
+        out_specs = P(flat)
+
+    elif strategy == "col":
+        def body(parts, x):
+            a_local = strip_lead(parts)
+            y_partial = _local_matvec(a_local, x[0], sr, kernel, impl)  # Kernel
+            y = _op_reduce_scatter(y_partial, sr, flat, d)  # Retrieve+Merge
+            return y[None]
+
+        in_specs = (a_specs, P(flat))
+        out_specs = P(flat)
+
+    elif strategy == "2d":
+        # Grid must match the two mesh axes.
+        assert (r_parts, c_parts) == (mesh.shape[ar], mesh.shape[ac]), (
+            f"2d grid {pm.grid} != mesh {(mesh.shape[ar], mesh.shape[ac])}")
+
+        def body(parts, x):
+            a_local = strip_lead(strip_lead(parts))
+            # Load: gather x chunks across axis_r. With the column-major 2d
+            # input layout (x2[r, c] = global chunk c*R + r), the gather over
+            # ar assembles exactly column block c on every grid row.
+            if compressed:
+                f = gather_frontier(x[0, 0], sr, f_local, ar)
+                y_partial = _spmspv(a_local, f, sr, impl=impl)
+            else:
+                x_cols = jax.lax.all_gather(x[0, 0], ar, tiled=True).reshape(-1)
+                y_partial = _local_matvec(a_local, x_cols, sr, kernel, impl)
+            # Retrieve+Merge over the column axis → y2[r, c] = chunk r*C + c.
+            y = _op_reduce_scatter(y_partial, sr, ac, c_parts)
+            return y[None, None]
+
+        in_specs = (jax.tree.map(lambda _: P((ar,), (ac,)), pm.parts), P(ar, ac))
+        out_specs = P(ar, ac)
+
+        fn_body = shard_map(body, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs, check_rep=False)
+
+        def fn2d(parts, x):
+            reshaped = jax.tree.map(
+                lambda v: v.reshape((r_parts, c_parts) + v.shape[1:]), parts)
+            x2 = vec_to_2d_layout(x, pm.grid)
+            y2 = fn_body(reshaped, x2)
+            return y2.reshape(d, -1)  # row-major chunks (canonical layout)
+
+        return fn2d
+    else:
+        raise ValueError(strategy)
+
+    return shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
+def vec_to_2d_layout(x: Array, grid) -> Array:
+    """Canonical [D, n_per] (chunk g at row g) → 2d input layout
+    x2[r, c] = chunk (c*R + r). Under pjit this is a collective permute —
+    the paper's inter-iteration vector reload through the host CPU."""
+    r_parts, c_parts = grid
+    # x2[r, c] = x[c*R + r]: reshape to (C, R) chunk grid then transpose.
+    return x.reshape(c_parts, r_parts, -1).transpose(1, 0, 2)
+
+
+def named_sharding(mesh: Mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))

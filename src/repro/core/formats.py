@@ -1,0 +1,361 @@
+"""Static-shape compressed sparse matrix containers (paper §2.1, §4.1).
+
+The paper's design space covers COO / CSR / CSC element formats plus the
+tile-granular adaptation we make for TPUs (BSR with dense tiles, §DESIGN.md).
+All containers carry **static shapes** (padded to nnz_max / tile budget) so
+they are jit/pjit/scan friendly: JAX cannot trace data-dependent shapes.
+
+Padding conventions
+-------------------
+* COO/CSR/CSC pad ``rows``/``cols`` with an out-of-range index (= M or N) and
+  ``vals`` with the semiring zero; XLA scatter drops out-of-range updates, so
+  padded entries are no-ops in every segment reduction.
+* BSR pads the tile list with all-zero tiles pointing at tile-column 0, which
+  are ⊕-identity contributions for every supported semiring (zero ⊗ x = zero,
+  y ⊕ zero = y) — except min_plus where the pad tile value is +inf.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.semiring import Semiring
+
+Array = jax.Array
+
+
+def _pad_to(x: np.ndarray, n: int, fill) -> np.ndarray:
+    out = np.full((n,) + x.shape[1:], fill, dtype=x.dtype)
+    out[: x.shape[0]] = x
+    return out
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class COOMatrix:
+    """Coordinate-list format. ``rows``/``cols`` int32 [nnz_max], ``vals`` [nnz_max].
+
+    Entries are stored row-major sorted (so this doubles as CSR's expanded
+    segment-id view); padding uses row=shape[0] (out of range → dropped).
+    """
+
+    rows: Array
+    cols: Array
+    vals: Array
+    nnz: Array  # scalar int32, true nnz
+    shape: Tuple[int, int]
+
+    def tree_flatten(self):
+        return (self.rows, self.cols, self.vals, self.nnz), (self.shape,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        rows, cols, vals, nnz = children
+        return cls(rows, cols, vals, nnz, aux[0])
+
+    @property
+    def nnz_max(self) -> int:
+        return self.rows.shape[0]
+
+    def to_dense(self, sr: Semiring) -> Array:
+        m, n = self.shape
+        dense = jnp.full((m, n), sr.zero, dtype=sr.dtype)
+        ok = self.rows < m
+        safe_r = jnp.where(ok, self.rows, 0)
+        safe_c = jnp.where(ok, self.cols, 0)
+        v = jnp.where(ok, self.vals.astype(sr.dtype), sr.zero)
+        # ⊕-scatter; for idempotent ⊕ (min/max/or) duplicate coordinates are fine.
+        if sr.collective == "psum":
+            return dense.at[safe_r, safe_c].add(jnp.where(ok, v, 0))
+        if sr.collective == "pmin":
+            return dense.at[safe_r, safe_c].min(v)
+        return dense.at[safe_r, safe_c].max(v)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CSRMatrix:
+    """Compressed sparse row: row_ptr [M+1], cols/vals [nnz_max] + expanded
+    row segment ids (precomputed so kernels avoid searchsorted at step time)."""
+
+    row_ptr: Array
+    cols: Array
+    vals: Array
+    seg_ids: Array  # [nnz_max] row index per entry, padded with M
+    nnz: Array
+    shape: Tuple[int, int]
+
+    def tree_flatten(self):
+        return (self.row_ptr, self.cols, self.vals, self.seg_ids, self.nnz), (self.shape,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, aux[0])
+
+    @property
+    def nnz_max(self) -> int:
+        return self.cols.shape[0]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CSCMatrix:
+    """Compressed sparse column: col_ptr [N+1], rows/vals sorted by column.
+
+    ``max_col_nnz`` (static) bounds any single column's length — SpMSpV's
+    gather-active-columns path materializes (f_max, max_col_nnz) slabs.
+    """
+
+    col_ptr: Array
+    rows: Array
+    vals: Array
+    nnz: Array
+    shape: Tuple[int, int]
+    max_col_nnz: int
+
+    def tree_flatten(self):
+        return (self.col_ptr, self.rows, self.vals, self.nnz), (self.shape, self.max_col_nnz)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, aux[0], aux[1])
+
+    @property
+    def nnz_max(self) -> int:
+        return self.rows.shape[0]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BSRMatrix:
+    """Block-sparse row format with **dense (bm, bn) tiles** — the TPU-native
+    adaptation of CSC/CSR (DESIGN.md §2): tile metadata is CSR-of-tiles.
+
+    tiles:        [t_max, bm, bn]  dense tile payloads (semiring dtype)
+    tile_cols:    [t_max] int32    tile-column index per tile (pad: 0 w/ zero tile)
+    tile_row_ptr: [n_block_rows+1] int32
+    """
+
+    tiles: Array
+    tile_cols: Array
+    tile_row_ptr: Array
+    shape: Tuple[int, int]
+    block: Tuple[int, int]
+
+    def tree_flatten(self):
+        return (self.tiles, self.tile_cols, self.tile_row_ptr), (self.shape, self.block)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, aux[0], aux[1])
+
+    @property
+    def n_block_rows(self) -> int:
+        return self.tile_row_ptr.shape[0] - 1
+
+    @property
+    def t_max(self) -> int:
+        return self.tiles.shape[0]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PaddedBSR:
+    """ELL-of-tiles: every block row padded to T slots — the layout the
+    Pallas kernels consume (uniform grid, scalar-prefetched column indices).
+
+    tiles:     [mb, T, bm, bn]  pad slots hold the ⊕-identity tile
+    tile_cols: [mb, T] int32    pad slots point at tile-column 0
+    """
+
+    tiles: Array
+    tile_cols: Array
+    shape: Tuple[int, int]
+    block: Tuple[int, int]
+
+    def tree_flatten(self):
+        return (self.tiles, self.tile_cols), (self.shape, self.block)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, aux[0], aux[1])
+
+    @property
+    def n_block_rows(self) -> int:
+        return self.tiles.shape[0]
+
+    @property
+    def slots(self) -> int:
+        return self.tiles.shape[1]
+
+
+# ---------------------------------------------------------------------------
+# Builders (host-side, numpy; run once per dataset, amortized like the paper's
+# matrix-load phase which §4.1 excludes from timing).
+# ---------------------------------------------------------------------------
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def build_coo(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+              shape: Tuple[int, int], sr: Semiring, nnz_max: int | None = None) -> COOMatrix:
+    order = np.lexsort((cols, rows))
+    rows, cols, vals = rows[order], cols[order], vals[order]
+    nnz = rows.shape[0]
+    nnz_max = nnz_max or _round_up(max(nnz, 1), 8)
+    zero = np.inf if sr.collective == "pmin" else 0
+    return COOMatrix(
+        rows=jnp.asarray(_pad_to(rows.astype(np.int32), nnz_max, shape[0])),
+        cols=jnp.asarray(_pad_to(cols.astype(np.int32), nnz_max, shape[1])),
+        vals=jnp.asarray(_pad_to(vals.astype(np.dtype(sr.dtype)), nnz_max, zero)),
+        nnz=jnp.asarray(nnz, jnp.int32),
+        shape=shape,
+    )
+
+
+def build_csr(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+              shape: Tuple[int, int], sr: Semiring, nnz_max: int | None = None) -> CSRMatrix:
+    coo = build_coo(rows, cols, vals, shape, sr, nnz_max)
+    m = shape[0]
+    counts = np.bincount(np.asarray(coo.rows)[: int(coo.nnz)], minlength=m + 1)[:m]
+    row_ptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
+    return CSRMatrix(
+        row_ptr=jnp.asarray(row_ptr),
+        cols=coo.cols,
+        vals=coo.vals,
+        seg_ids=coo.rows,
+        nnz=coo.nnz,
+        shape=shape,
+    )
+
+
+def build_csc(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+              shape: Tuple[int, int], sr: Semiring, nnz_max: int | None = None) -> CSCMatrix:
+    order = np.lexsort((rows, cols))
+    rows, cols, vals = rows[order], cols[order], vals[order]
+    nnz = rows.shape[0]
+    nnz_max = nnz_max or _round_up(max(nnz, 1), 8)
+    n = shape[1]
+    counts = np.bincount(cols, minlength=n)
+    col_ptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
+    zero = np.inf if sr.collective == "pmin" else 0
+    max_col_nnz = int(counts.max()) if nnz else 1
+    return CSCMatrix(
+        col_ptr=jnp.asarray(col_ptr),
+        rows=jnp.asarray(_pad_to(rows.astype(np.int32), nnz_max, shape[0])),
+        vals=jnp.asarray(_pad_to(vals.astype(np.dtype(sr.dtype)), nnz_max, zero)),
+        nnz=jnp.asarray(nnz, jnp.int32),
+        shape=shape,
+        max_col_nnz=max(1, max_col_nnz),
+    )
+
+
+def build_bsr(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+              shape: Tuple[int, int], sr: Semiring,
+              block: Tuple[int, int] = (128, 128),
+              t_max: int | None = None) -> BSRMatrix:
+    """Densify nonzero (bm, bn) tiles; CSR-of-tiles metadata.
+
+    For min_plus the dense-tile background is +inf (⊗-annihilator under min,+
+    would be wrong: inf + x = inf, min-identity ✓).
+    """
+    bm, bn = block
+    m, n = shape
+    mb, nb = -(-m // bm), -(-n // bn)
+    trow, tcol = rows // bm, cols // bn
+    tile_id = trow * nb + tcol
+    order = np.argsort(tile_id, kind="stable")
+    rows, cols, vals, tile_id = rows[order], cols[order], vals[order], tile_id[order]
+    uniq, starts = np.unique(tile_id, return_index=True)
+    n_tiles = uniq.shape[0]
+    t_max = t_max or max(1, int(n_tiles))
+    background = np.inf if sr.collective == "pmin" else 0
+    np_dtype = np.dtype(sr.dtype)
+    tiles = np.full((t_max, bm, bn), background, dtype=np_dtype)
+    tile_cols_np = np.zeros((t_max,), dtype=np.int32)
+    ends = np.append(starts[1:], rows.shape[0])
+    tile_counts = np.zeros((mb,), dtype=np.int64)
+    for k in range(n_tiles):
+        s, e = starts[k], ends[k]
+        tr, tc = int(uniq[k]) // nb, int(uniq[k]) % nb
+        lr = rows[s:e] - tr * bm
+        lc = cols[s:e] - tc * bn
+        if sr.collective == "pmin":
+            np.minimum.at(tiles[k], (lr, lc), vals[s:e].astype(np_dtype))
+        elif sr.collective == "psum":
+            np.add.at(tiles[k], (lr, lc), vals[s:e].astype(np_dtype))
+        else:
+            np.maximum.at(tiles[k], (lr, lc), vals[s:e].astype(np_dtype))
+        tile_cols_np[k] = tc
+        tile_counts[tr] += 1
+    tile_row_ptr = np.concatenate([[0], np.cumsum(tile_counts)]).astype(np.int32)
+    return BSRMatrix(
+        tiles=jnp.asarray(tiles),
+        tile_cols=jnp.asarray(tile_cols_np),
+        tile_row_ptr=jnp.asarray(tile_row_ptr),
+        shape=(mb * bm, nb * bn),
+        block=block,
+    )
+
+
+def build_bsr_padded(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+                     shape: Tuple[int, int], sr: Semiring,
+                     block: Tuple[int, int] = (128, 128),
+                     slots: int | None = None) -> PaddedBSR:
+    """ELL-of-tiles builder: densify nonzero tiles, pad each block row to a
+    uniform slot count (static Pallas grid)."""
+    bm, bn = block
+    m, n = shape
+    mb, nb = -(-m // bm), -(-n // bn)
+    trow, tcol = rows // bm, cols // bn
+    background = np.inf if sr.collective == "pmin" else 0
+    np_dtype = np.dtype(sr.dtype)
+
+    per_row_tiles: list[dict[int, np.ndarray]] = [dict() for _ in range(mb)]
+    order = np.lexsort((tcol, trow))
+    rows_s, cols_s, vals_s = rows[order], cols[order], vals[order]
+    trow_s, tcol_s = trow[order], tcol[order]
+    keys = trow_s.astype(np.int64) * nb + tcol_s
+    uniq, starts = np.unique(keys, return_index=True)
+    ends = np.append(starts[1:], keys.shape[0])
+    for k in range(uniq.shape[0]):
+        s, e = starts[k], ends[k]
+        tr, tc = int(uniq[k]) // nb, int(uniq[k]) % nb
+        tile = np.full((bm, bn), background, dtype=np_dtype)
+        lr = rows_s[s:e] - tr * bm
+        lc = cols_s[s:e] - tc * bn
+        if sr.collective == "pmin":
+            np.minimum.at(tile, (lr, lc), vals_s[s:e].astype(np_dtype))
+        elif sr.collective == "psum":
+            np.add.at(tile, (lr, lc), vals_s[s:e].astype(np_dtype))
+        else:
+            np.maximum.at(tile, (lr, lc), vals_s[s:e].astype(np_dtype))
+        per_row_tiles[tr][tc] = tile
+
+    t_needed = max(1, max((len(d) for d in per_row_tiles), default=1))
+    slots = slots or t_needed
+    assert slots >= t_needed, f"slots={slots} < needed {t_needed}"
+    tiles = np.full((mb, slots, bm, bn), background, dtype=np_dtype)
+    tile_cols_np = np.zeros((mb, slots), dtype=np.int32)
+    for i, d in enumerate(per_row_tiles):
+        for j, (tc, tile) in enumerate(sorted(d.items())):
+            tiles[i, j] = tile
+            tile_cols_np[i, j] = tc
+    return PaddedBSR(
+        tiles=jnp.asarray(tiles),
+        tile_cols=jnp.asarray(tile_cols_np),
+        shape=(mb * bm, nb * bn),
+        block=block,
+    )
+
+
+def coo_from_dense(dense: np.ndarray, sr: Semiring):
+    """Test helper: extract structural nonzeros (≠ semiring zero)."""
+    zero = np.inf if sr.collective == "pmin" else 0
+    rows, cols = np.nonzero(dense != zero)
+    return rows.astype(np.int32), cols.astype(np.int32), dense[rows, cols]

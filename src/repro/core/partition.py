@@ -1,0 +1,118 @@
+"""Adjacency-matrix partitioning across PIM cores → mesh devices (paper §4.1.1).
+
+Three strategies, exactly the paper's Figure 3:
+
+* row-wise   — D block-rows; every device needs the full input vector
+               (Load = all-gather), no merge.
+* column-wise— D block-cols; input stays sharded, every device emits a full
+               partial output (Merge = ⊕-reduce).
+* 2D         — R×C grid; input gathered along one mesh axis, output ⊕-reduced
+               along the other (SUMMA-style).
+
+Partitions are **equal-sized with padded nnz** (SparseP's static equal tiles):
+every device gets identical static shapes, so the stacked arrays shard
+cleanly over the mesh axis with shard_map.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import formats
+from repro.core.semiring import Semiring
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionedMatrix:
+    """Stacked per-device partitions of one logical sparse matrix.
+
+    Every leaf has a leading device axis of size R*C (row-major over the
+    grid); `grid=(R, 1)` is row-wise, `(1, C)` column-wise.
+    """
+
+    parts: object  # stacked COO/CSR/CSC/BSR pytree with leading axis D
+    grid: Tuple[int, int]
+    shape: Tuple[int, int]          # global (padded) shape
+    local_shape: Tuple[int, int]    # per-device tile shape
+    fmt: str
+
+    @property
+    def n_devices(self) -> int:
+        return self.grid[0] * self.grid[1]
+
+
+def _split_edges(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+                 shape: Tuple[int, int], grid: Tuple[int, int]):
+    """Assign each edge to its grid tile; return per-tile localized edges."""
+    r_parts, c_parts = grid
+    m, n = shape
+    m_per = -(-m // r_parts)
+    n_per = -(-n // c_parts)
+    tr = np.minimum(rows // m_per, r_parts - 1)
+    tc = np.minimum(cols // n_per, c_parts - 1)
+    tid = tr * c_parts + tc
+    out = []
+    for d in range(r_parts * c_parts):
+        sel = tid == d
+        r_off = (d // c_parts) * m_per
+        c_off = (d % c_parts) * n_per
+        out.append((rows[sel] - r_off, cols[sel] - c_off, vals[sel]))
+    return out, (m_per, n_per)
+
+
+def partition(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+              shape: Tuple[int, int], grid: Tuple[int, int], fmt: str,
+              sr: Semiring, block: Tuple[int, int] = (128, 128)) -> PartitionedMatrix:
+    """Partition + convert each tile to ``fmt`` with uniform padded sizes."""
+    per_tile, local_shape = _split_edges(rows, cols, vals, shape, grid)
+    nnz_max = max(1, max(r.shape[0] for r, _, _ in per_tile))
+    nnz_max = ((nnz_max + 7) // 8) * 8
+
+    built = []
+    for (r, c, v) in per_tile:
+        if fmt == "coo":
+            built.append(formats.build_coo(r, c, v, local_shape, sr, nnz_max))
+        elif fmt == "csr":
+            built.append(formats.build_csr(r, c, v, local_shape, sr, nnz_max))
+        elif fmt == "csc":
+            built.append(formats.build_csc(r, c, v, local_shape, sr, nnz_max))
+        elif fmt == "bsr":
+            built.append(formats.build_bsr_padded(r, c, v, local_shape, sr, block))
+        else:
+            raise ValueError(fmt)
+
+    if fmt == "csc":
+        # Uniform static max_col_nnz across tiles (shard_map needs identical shapes).
+        mc = max(b.max_col_nnz for b in built)
+        built = [dataclasses.replace(b, max_col_nnz=mc) for b in built]
+    if fmt == "bsr":
+        slots = max(b.slots for b in built)
+        rebuilt = []
+        for (r, c, v) in per_tile:
+            rebuilt.append(formats.build_bsr_padded(r, c, v, local_shape, sr, block, slots=slots))
+        built = rebuilt
+        local_shape = built[0].shape  # padded up to block multiple
+
+    import jax
+
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *built)
+    r_parts, c_parts = grid
+    return PartitionedMatrix(
+        parts=stacked,
+        grid=grid,
+        shape=(local_shape[0] * r_parts, local_shape[1] * c_parts),
+        local_shape=local_shape,
+        fmt=fmt,
+    )
+
+
+def shard_vector(x: np.ndarray, n_parts: int, fill=0) -> np.ndarray:
+    """Pad + reshape a global vector into [n_parts, n_per] for shard_map.
+    ``fill`` must be the semiring zero (+inf for min_plus)."""
+    n_per = -(-x.shape[0] // n_parts)
+    pad = n_parts * n_per - x.shape[0]
+    xp = np.pad(x, (0, pad), constant_values=fill)
+    return xp.reshape(n_parts, n_per)

@@ -1,0 +1,123 @@
+"""Algebraic semirings for linear-algebraic graph processing (paper §2.1, Table 1).
+
+A semiring generalizes (+, x) to (add ⊕, mul ⊗) with identities (zero, one).
+The same SpMV/SpMSpV engine then runs BFS (⟨∨,∧⟩), SSSP (⟨min,+⟩) and
+PPR (⟨+,×⟩) just by swapping the semiring — the paper's Table 1.
+
+Semirings here are *static* (python-level) objects: kernels stage the chosen
+ops at trace time, so there is no runtime dispatch cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    """⟨S, ⊕, ⊗, zero, one⟩ with JAX-traceable ops.
+
+    add/mul are elementwise binary ops; add_reduce reduces an axis with ⊕.
+    ``zero`` is the ⊕-identity (and ⊗-annihilator), ``one`` the ⊗-identity.
+    ``collective`` names the lax collective that implements a distributed
+    ⊕-reduction (used by core.distributed for the Merge phase).
+    """
+
+    name: str
+    add: Callable[[Array, Array], Array]
+    mul: Callable[[Array, Array], Array]
+    zero: Any
+    one: Any
+    dtype: Any
+    collective: str  # one of: "psum", "pmin", "pmax", "por"
+
+    def add_reduce(self, x: Array, axis: int | tuple[int, ...]) -> Array:
+        if self.collective == "psum":
+            return jnp.sum(x, axis=axis)
+        if self.collective == "pmin":
+            return jnp.min(x, axis=axis)
+        if self.collective == "pmax":
+            return jnp.max(x, axis=axis)
+        if self.collective == "por":
+            return jnp.any(x, axis=axis) if x.dtype == jnp.bool_ else jnp.max(x, axis=axis)
+        raise ValueError(self.collective)
+
+    def segment_reduce(self, data: Array, segment_ids: Array, num_segments: int) -> Array:
+        """⊕-reduce ``data`` into ``num_segments`` buckets (CSR/COO kernels)."""
+        if self.collective == "psum":
+            return jax.ops.segment_sum(data, segment_ids, num_segments)
+        if self.collective in ("pmin",):
+            # empty segments come back +inf == min_plus zero, already correct
+            return jax.ops.segment_min(data, segment_ids, num_segments)
+        if self.collective in ("pmax", "por"):
+            # empty segments come back dtype-min; clamp to the ⊕-identity
+            out = jax.ops.segment_max(data, segment_ids, num_segments)
+            return jnp.maximum(out, jnp.asarray(self.zero, out.dtype))
+        raise ValueError(self.collective)
+
+    def preduce(self, x: Array, axis_name: str) -> Array:
+        """Distributed ⊕-reduction over a mesh axis (the paper's Merge phase,
+        executed on-fabric instead of on the host CPU)."""
+        if self.collective == "psum":
+            return jax.lax.psum(x, axis_name)
+        if self.collective == "pmin":
+            return jax.lax.pmin(x, axis_name)
+        if self.collective in ("pmax", "por"):
+            return jax.lax.pmax(x, axis_name)
+        raise ValueError(self.collective)
+
+    def matvec(self, a_dense: Array, x: Array) -> Array:
+        """Dense reference y_i = ⊕_j a_ij ⊗ x_j (oracle for tests)."""
+        return self.add_reduce(self.mul(a_dense, x[None, :]), axis=1)
+
+
+def _saturating_or(a: Array, b: Array) -> Array:
+    return jnp.maximum(a, b)
+
+
+# BFS: boolean ⟨∨,∧⟩ over {0,1}; stored as int32 0/1 (TPU-friendly; bool VREGs
+# are int lanes anyway). zero=0, one=1.
+BOOL_OR_AND = Semiring(
+    name="bool_or_and",
+    add=_saturating_or,
+    mul=jnp.minimum,  # AND on {0,1}
+    zero=0,
+    one=1,
+    dtype=jnp.int32,
+    collective="por",
+)
+
+# SSSP: tropical ⟨min,+⟩ over ℝ∪{∞}. zero=+inf, one=0.
+MIN_PLUS = Semiring(
+    name="min_plus",
+    add=jnp.minimum,
+    mul=jnp.add,
+    zero=jnp.inf,
+    one=0.0,
+    dtype=jnp.float32,
+    collective="pmin",
+)
+
+# PPR / PageRank: standard arithmetic ⟨+,×⟩.
+PLUS_TIMES = Semiring(
+    name="plus_times",
+    add=jnp.add,
+    mul=jnp.multiply,
+    zero=0.0,
+    one=1.0,
+    dtype=jnp.float32,
+    collective="psum",
+)
+
+SEMIRINGS: dict[str, Semiring] = {
+    s.name: s for s in (BOOL_OR_AND, MIN_PLUS, PLUS_TIMES)
+}
+
+
+def get(name: str) -> Semiring:
+    return SEMIRINGS[name]

@@ -1,0 +1,216 @@
+"""Logical-axis sharding rules with divisibility-aware fallback.
+
+jit rejects uneven in_shardings (probed at design time), so a logical dim
+only takes a mesh axis when the axis size divides the dim; otherwise the
+rule is dropped for that tensor (e.g. qwen1.5-32b's 40 heads on a 16-way
+model axis fall back to replicated heads — its fused projections still
+shard on the 5120-wide output dim).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.params import P_, is_spec
+
+# logical dim name → candidate mesh axes (first that divides wins)
+RULES: dict[str, Tuple[str, ...]] = {
+    "vocab": ("model",),
+    "embed": ("data",),           # FSDP: weights 2D-sharded (model x data);
+                                  # XLA all-gathers per layer inside the scan.
+                                  # Required for mixtral-8x22b (280 GB bf16
+                                  # params / 16-way TP alone = 17.5 GB > HBM).
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "mlp": ("model",),            # FFN hidden (column-parallel in, row-parallel out)
+    "experts": ("model",),        # expert parallelism
+    "expert_mlp": ("model",),     # TP fallback inside experts when E doesn't divide
+    "kv_lora": (),
+    "layers": (),                 # scan dim
+    "groups": (),
+    "conv": (),
+    "state": (),
+    "qk_fused": ("model",),       # fused n_heads*head_dim projections
+    "vision": (),
+    "batch": ("pod", "data"),
+    "seq": (),
+}
+
+
+def axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+# --------------------- activation sharding constraints ----------------------
+# XLA's sharding propagation picks pathological layouts for attention when
+# head counts don't divide the model axis (probed: batch-replicated scores +
+# score-sized all-reduces inside the kv-chunk loop). These helpers pin the
+# activation layout explicitly. The "current mesh" is process-global, set by
+# the step builders / dry-run before tracing.
+
+_ACT_MESH: list = [None]
+
+
+def set_activation_mesh(mesh: Optional[Mesh]) -> None:
+    _ACT_MESH[0] = mesh
+
+
+def activation_mesh() -> Optional[Mesh]:
+    return _ACT_MESH[0]
+
+
+def _data_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def constrain(x, entries):
+    """with_sharding_constraint(x, P(*entries)) if a mesh is active and every
+    named axis divides its dim; no-op otherwise (keeps CPU tests mesh-free).
+    Axes that are *manual* in the current trace (e.g. the pod axis inside
+    the compressed-gradient shard_map) are dropped from the spec."""
+    mesh = _ACT_MESH[0]
+    if mesh is None or x is None:
+        return x
+    manual: frozenset = frozenset()
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        manual = frozenset(getattr(am, "manual_axes", ()) or ())
+    except Exception:
+        pass
+    if manual:
+        entries = [
+            (tuple(a for a in (e if isinstance(e, tuple) else (e,))
+                   if a not in manual) or None)
+            if e is not None else None
+            for e in entries]
+    fixed = []
+    for dim, e in zip(x.shape, list(entries) + [None] * (x.ndim - len(entries))):
+        if e is None:
+            fixed.append(None)
+            continue
+        axes = e if isinstance(e, tuple) else (e,)
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        prod = 1
+        for a in axes:
+            prod *= mesh.shape[a]
+        fixed.append(axes if (axes and dim % prod == 0) else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))
+
+
+def constrain_batch_tree(tree):
+    """Shard every leaf's leading dim over (pod, data) — microbatch slices."""
+    mesh = _ACT_MESH[0]
+    if mesh is None:
+        return tree
+    da = _data_axes(mesh)
+    return jax.tree.map(lambda x: constrain(x, [da]), tree)
+
+
+def constrain_attention(q, k, v):
+    """Pin attention layouts. q [B,T,H,D]; k/v [B,S,KH,D].
+
+    * heads divide the model axis → Megatron head sharding (q: H, k/v: KH).
+    * otherwise → sequence-parallel attention: shard q's T over model and
+      replicate k/v on it. Scores come out sharded over Tq — NO score-sized
+      all-reduce regardless of head count (the §Perf fix for qwen's 40 heads
+      and mixtral/nemo/minitron's kv=8 on the 16-way model axis).
+    Decode (T==1) keeps q replicated on model; the cache layout governs.
+    """
+    mesh = _ACT_MESH[0]
+    if mesh is None or "model" not in mesh.axis_names:
+        return q, k, v
+    da = _data_axes(mesh)
+    ms = mesh.shape["model"]
+    kh = k.shape[2] if k.ndim == 4 else 1
+    if kh % ms == 0:
+        q = constrain(q, [da, None, "model", None])
+        k = constrain(k, [da, None, "model", None])
+        v = constrain(v, [da, None, "model", None])
+    elif q.shape[1] > 1 and q.shape[1] % ms == 0:
+        q = constrain(q, [da, "model", None, None])
+        k = constrain(k, [da, None, None, None])
+        v = constrain(v, [da, None, None, None])
+    else:
+        q = constrain(q, [da, None, None, None])
+        k = constrain(k, [da, None, None, None])
+        v = constrain(v, [da, None, None, None])
+    return q, k, v
+
+
+def constrain_block_out(x):
+    """Residual-stream layout: [B@data, T, D] replicated on model."""
+    mesh = _ACT_MESH[0]
+    if mesh is None:
+        return x
+    return constrain(x, [_data_axes(mesh), None, None])
+
+
+def spec_for(mesh: Mesh, shape: Sequence[int], dims: Sequence[Optional[str]],
+             rules: dict | None = None) -> P:
+    """Build a PartitionSpec: per dim, first rule axis that divides it."""
+    rules = rules or RULES
+    out, used = [], set()
+    for size, dim in zip(shape, dims):
+        entry: object = None
+        if dim is not None:
+            cands = rules.get(dim, ())
+            if dim == "batch":
+                # batch takes *all* its axes jointly (pod × data)
+                axes = tuple(a for a in cands if a in mesh.axis_names and a not in used)
+                prod = 1
+                for a in axes:
+                    prod *= mesh.shape[a]
+                if axes and size % prod == 0:
+                    entry = axes
+                    used.update(axes)
+            else:
+                for a in cands:
+                    if a in mesh.axis_names and a not in used and size % mesh.shape[a] == 0:
+                        entry = a
+                        used.add(a)
+                        break
+        out.append(entry)
+    # strip trailing Nones for tidiness
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def param_shardings(mesh: Mesh, tree, rules: dict | None = None):
+    """NamedSharding pytree for a P_ spec tree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, spec_for(mesh, s.shape, s.dims, rules)),
+        tree, is_leaf=is_spec)
+
+
+def zero1_shardings(mesh: Mesh, tree, rules: dict | None = None,
+                    zero_axis: str = "data"):
+    """Optimizer-state shardings: the param spec plus ZeRO-1 sharding of the
+    largest still-unsharded dim over the data axis (states are only touched
+    at the step boundary, so slicing them over data is free bandwidth-wise).
+    """
+    base_rules = rules or RULES
+
+    def one(s: P_):
+        spec = spec_for(mesh, s.shape, s.dims, base_rules)
+        entries = list(spec) + [None] * (len(s.shape) - len(spec))
+        used = {e for ent in entries if ent is not None
+                for e in (ent if isinstance(ent, tuple) else (ent,))}
+        if zero_axis in mesh.axis_names and zero_axis not in used:
+            z = mesh.shape[zero_axis]
+            # pick the largest unsharded dim divisible by the zero axis
+            best, best_size = -1, 0
+            for i, (size, e) in enumerate(zip(s.shape, entries)):
+                if e is None and size % z == 0 and size > best_size:
+                    best, best_size = i, size
+            if best >= 0:
+                entries[best] = zero_axis
+        while entries and entries[-1] is None:
+            entries.pop()
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree.map(one, tree, is_leaf=is_spec)

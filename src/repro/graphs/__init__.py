@@ -1,0 +1,11 @@
+"""Linear-algebraic graph applications (BFS/SSSP/PPR) on the core engine."""
+from repro.graphs.bfs import BFSResult, bfs, bfs_reference  # noqa: F401
+from repro.graphs.cost_model import trained_stump, training_corpus  # noqa: F401
+from repro.graphs.datasets import (  # noqa: F401
+    TABLE2, Graph, GraphSpec, generate, rmat_graph, road_graph, uniform_graph,
+)
+from repro.graphs.engine import GraphEngine, build_engine  # noqa: F401
+from repro.graphs.ppr import (  # noqa: F401
+    PPRResult, pagerank, pagerank_reference, ppr, ppr_reference,
+)
+from repro.graphs.sssp import SSSPResult, sssp, sssp_reference  # noqa: F401

@@ -1,0 +1,87 @@
+"""Breadth-First Search over the ⟨∨,∧⟩ semiring (paper §5.1, Table 1).
+
+Level-synchronous pull BFS: fₖ₊₁ = (Aᵀ ⊕.⊗ fₖ) ∧ ¬visited. The frontier
+density is monitored every level; the adaptive policy switches SpMSpV→SpMV
+once it crosses the decision-tree threshold (§4.2) — all inside one jitted
+`lax.while_loop` (`lax.cond` makes the switch free, unlike UPMEM's
+host-side check).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.semiring import BOOL_OR_AND
+from repro.graphs.engine import GraphEngine, density_of
+
+Array = jax.Array
+
+
+class BFSResult(NamedTuple):
+    levels: Array       # int32 [n]; -1 = unreached
+    iterations: Array   # scalar int32
+    densities: Array    # f32 [max_iters] frontier density trace (Fig 4)
+    kernel_used: Array  # int32 [max_iters]; 0 = SpMSpV, 1 = SpMV, -1 = unused
+
+
+def bfs(engine: GraphEngine, source: int, max_iters: int = 64,
+        policy: str = "adaptive") -> BFSResult:
+    sr = engine.sr
+    assert sr.name == BOOL_OR_AND.name
+    n = engine.n
+    step = engine.step_fn(policy)
+
+    def cond(state):
+        frontier, visited, levels, it, done, dens, kern = state
+        return (~done) & (it < max_iters)
+
+    def body(state):
+        frontier, visited, levels, it, done, dens, kern = state
+        density = density_of(frontier, sr, engine.n_true)
+        used = jnp.where(policy == "spmv", 1,
+                         jnp.where(policy == "spmspv", 0,
+                                   (density > engine.threshold).astype(jnp.int32)))
+        y = step(frontier, density)
+        new_frontier = jnp.where((y != sr.zero) & (visited == 0),
+                                 jnp.asarray(1, sr.dtype), jnp.asarray(0, sr.dtype))
+        levels = jnp.where((new_frontier != 0) & (levels < 0), it + 1, levels)
+        visited = jnp.where(new_frontier != 0, 1, visited)
+        done = jnp.sum(new_frontier) == 0
+        dens = dens.at[it].set(density)
+        kern = kern.at[it].set(used)
+        return (new_frontier, visited, levels, it + 1, done, dens, kern)
+
+    frontier0 = jnp.zeros((n,), sr.dtype).at[source].set(1)
+    visited0 = jnp.zeros((n,), jnp.int32).at[source].set(1)
+    levels0 = jnp.full((n,), -1, jnp.int32).at[source].set(0)
+    dens0 = jnp.full((max_iters,), -1.0, jnp.float32)
+    kern0 = jnp.full((max_iters,), -1, jnp.int32)
+
+    frontier, visited, levels, it, done, dens, kern = jax.lax.while_loop(
+        cond, body, (frontier0, visited0, levels0, jnp.asarray(0, jnp.int32),
+                     jnp.asarray(False), dens0, kern0))
+    return BFSResult(levels[: engine.n_true], it, dens, kern)
+
+
+def bfs_reference(rows: np.ndarray, cols: np.ndarray, n: int, source: int) -> np.ndarray:
+    """CPU oracle: classic queue BFS over the directed edge list."""
+    adj_ptr = np.zeros(n + 1, np.int64)
+    np.add.at(adj_ptr, rows + 1, 1)
+    adj_ptr = np.cumsum(adj_ptr)
+    order = np.argsort(rows, kind="stable")
+    adj = cols[order]
+    levels = np.full(n, -1, np.int32)
+    levels[source] = 0
+    q = [source]
+    while q:
+        nq = []
+        for u in q:
+            for v in adj[adj_ptr[u]: adj_ptr[u + 1]]:
+                if levels[v] < 0:
+                    levels[v] = levels[u] + 1
+                    nq.append(int(v))
+        q = nq
+    return levels

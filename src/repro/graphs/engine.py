@@ -1,0 +1,189 @@
+"""Traversal engine: builds matvec closures over a graph and runs the
+adaptive SpMSpV↔SpMV iteration skeleton shared by BFS/SSSP/PPR (§4.2).
+
+Apps are written against two closures (spmv_fn, spmspv_fn), both taking and
+returning *dense* vectors — the SpMSpV branch compresses internally. This
+keeps `lax.cond` signatures uniform and lets the same app code run on a
+single device (element or Pallas kernels) or on a mesh (distributed
+closures built from core.distributed).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import formats
+from repro.core.adaptive import DecisionStump
+from repro.core.semiring import Semiring
+from repro.core.spmspv import frontier_from_dense, spmspv
+from repro.core.spmv import spmv
+from repro.graphs.datasets import Graph
+
+Array = jax.Array
+MatvecFn = Callable[[Array], Array]
+
+
+@dataclasses.dataclass
+class GraphEngine:
+    """Per-(graph, semiring) compiled state: the transposed adjacency in the
+    formats the two kernels want, plus the adaptive switch threshold."""
+
+    spmv_fn: MatvecFn
+    spmspv_fn: MatvecFn
+    n: int                 # padded vector length
+    n_true: int
+    threshold: float
+    graph_class: str
+    sr: Semiring
+
+    def adaptive_fn(self, x: Array, density: Array) -> Array:
+        """One adaptive matvec: SpMV above the density threshold else SpMSpV."""
+        return jax.lax.cond(density > self.threshold, self.spmv_fn, self.spmspv_fn, x)
+
+    def step_fn(self, policy: str) -> Callable[[Array, Array], Array]:
+        if policy == "spmv":
+            return lambda x, _d: self.spmv_fn(x)
+        if policy == "spmspv":
+            return lambda x, _d: self.spmspv_fn(x)
+        if policy == "adaptive":
+            return self.adaptive_fn
+        raise ValueError(policy)
+
+
+def edge_values(g: Graph, sr: Semiring, weighted: bool, seed: int = 0,
+                normalize: bool = False) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    if sr.name == "bool_or_and":
+        return np.ones(g.nnz, np.int32)
+    if weighted:
+        vals = rng.integers(1, 10, g.nnz).astype(np.float32)
+    else:
+        vals = np.ones(g.nnz, np.float32)
+    if normalize:  # column-stochastic for PPR: weight(u→v) = 1/outdeg(u)
+        deg = np.maximum(g.out_degrees(), 1)
+        vals = vals / deg[g.rows]
+    return vals
+
+
+def build_engine(g: Graph, sr: Semiring, stump: DecisionStump | None = None,
+                 fmt_spmv: str = "csr", fmt_spmspv: str = "csc",
+                 weighted: bool = False, normalize: bool = False,
+                 seed: int = 0, f_max: int | None = None) -> GraphEngine:
+    """Build single-device closures over the *transposed* adjacency
+    (traversals compute y = Aᵀ ⊕.⊗ x: pull from in-neighbours)."""
+    stump = stump or DecisionStump()
+    vals = edge_values(g, sr, weighted, seed, normalize)
+    # transpose: swap row/col
+    rows, cols = g.cols.astype(np.int32), g.rows.astype(np.int32)
+    shape = (g.n, g.n)
+
+    def build(fmt):
+        if fmt == "coo":
+            return formats.build_coo(rows, cols, vals, shape, sr)
+        if fmt == "csr":
+            return formats.build_csr(rows, cols, vals, shape, sr)
+        if fmt == "csc":
+            return formats.build_csc(rows, cols, vals, shape, sr)
+        if fmt == "bsr":
+            return formats.build_bsr_padded(rows, cols, vals, shape, sr, block=(128, 128))
+        raise ValueError(fmt)
+
+    a_mv = build(fmt_spmv)
+    a_msv = build(fmt_spmspv)
+    n_pad = max(getattr(a_mv, "shape", shape)[0], getattr(a_msv, "shape", shape)[0])
+
+    def spmv_fn(x: Array) -> Array:
+        xp = _pad(x, a_mv.shape[1], sr)
+        return _pad(spmv(a_mv, xp, sr)[: shape[0]], n_pad, sr)
+
+    # Bucketed frontiers (TPU adaptation, DESIGN.md §2): XLA needs static
+    # shapes, so a single f_max=n frontier would make SpMSpV's work
+    # density-independent — the opposite of the paper's point. Instead we
+    # compile a small ladder of frontier capacities and lax.switch on the
+    # *live* nonzero count; work then tracks density in ~4x steps while the
+    # whole traversal stays inside one jit. An explicit f_max pins one rung.
+    if f_max:
+        buckets = [min(f_max, g.n)]
+    else:
+        buckets = sorted({max(64, g.n // 16), max(128, g.n // 4), g.n})
+
+    def msv_at(fmax):
+        def fn(x: Array) -> Array:
+            f = frontier_from_dense(x[: shape[1]], sr, f_max=fmax)
+            y = spmspv(a_msv, f, sr)
+            return _pad(y[: shape[0]], n_pad, sr)
+        return fn
+
+    branches = [msv_at(b) for b in buckets]
+
+    def spmspv_fn(x: Array) -> Array:
+        if len(branches) == 1:
+            return branches[0](x)
+        nnz = jnp.sum((x[: shape[1]] != sr.zero).astype(jnp.int32))
+        sel = jnp.searchsorted(jnp.asarray(buckets, jnp.int32), nnz)
+        sel = jnp.minimum(sel, len(buckets) - 1)
+        return jax.lax.switch(sel, branches, x)
+
+    feats = g.features()
+    return GraphEngine(
+        spmv_fn=spmv_fn,
+        spmspv_fn=spmspv_fn,
+        n=n_pad,
+        n_true=g.n,
+        threshold=stump.switch_threshold(feats),
+        graph_class=stump.classify(feats),
+        sr=sr,
+    )
+
+
+def calibrate_threshold(engine: GraphEngine, probe_densities=(0.01, 0.05,
+                        0.2, 0.5), iters: int = 3) -> float:
+    """Hardware-calibrated switch point (beyond-paper, DESIGN.md §8).
+
+    The paper's 20%/50% thresholds encode *UPMEM's* SpMV:SpMSpV cost ratio.
+    This measures both kernels on the actual backend at a few densities and
+    returns the crossover — on this CPU mesh SpMV tends to win everywhere
+    (threshold → 0); on transfer-bound hardware the paper's values emerge."""
+    import time
+
+    spmv = jax.jit(engine.spmv_fn)
+    spmspv = jax.jit(engine.spmspv_fn)
+    rng = np.random.default_rng(0)
+
+    def t(fn, x):
+        fn(x).block_until_ready()
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            fn(x).block_until_ready()
+            ts.append(time.perf_counter() - t0)
+        return min(ts)
+
+    last_spmspv_win = 0.0
+    for d in sorted(probe_densities):
+        nz = rng.random(engine.n) < d
+        if engine.sr.name == "min_plus":
+            xv = np.where(nz, rng.random(engine.n), np.inf).astype(np.float32)
+        else:
+            xv = (nz * rng.random(engine.n)).astype(np.float32)
+        x = jnp.asarray(xv, engine.sr.dtype)
+        if t(spmspv, x) < t(spmv, x):
+            last_spmspv_win = d
+    return last_spmspv_win
+
+
+def _pad(x: Array, n: int, sr: Semiring) -> Array:
+    if x.shape[0] == n:
+        return x
+    if x.shape[0] > n:
+        return x[:n]
+    return jnp.pad(x, (0, n - x.shape[0]), constant_values=sr.zero)
+
+
+def density_of(x: Array, sr: Semiring, n_true: int) -> Array:
+    nz = jnp.sum((x[:n_true] != sr.zero).astype(jnp.int32))
+    return nz.astype(jnp.float32) / float(n_true)

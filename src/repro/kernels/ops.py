@@ -1,0 +1,90 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``INTERPRET`` defaults to True off-TPU so the whole suite (tests, CPU
+benches, distributed engine) runs the *kernel body* in interpret mode;
+on a real TPU backend it compiles to Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import PaddedBSR
+from repro.core.semiring import Semiring
+from repro.core.spmspv import Frontier
+from repro.kernels import ref
+from repro.kernels.semiring_spmv import semiring_spmv_padded
+from repro.kernels.spmspv_tiles import semiring_spmspv_padded
+
+Array = jax.Array
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def semiring_spmv(a: PaddedBSR, x: Array, sr: Semiring,
+                  interpret: bool | None = None) -> Array:
+    """y = A ⊕.⊗ x (dense x). x length must be a.shape[1] (padded)."""
+    assert x.shape[0] == a.shape[1], (x.shape, a.shape)
+    itp = INTERPRET if interpret is None else interpret
+    return semiring_spmv_padded(a.tiles, a.tile_cols, x.astype(sr.dtype),
+                                sr=sr, interpret=itp)
+
+
+def _spmspv_meta(a: PaddedBSR, f: Frontier, sr: Semiring) -> Array:
+    """Build the scalar-prefetch metadata: per block row, compact the slots
+    whose tile-column is frontier-active to the front. Pure jnp (runs under
+    jit); only metadata moves, never tile payloads."""
+    mb, t = a.tile_cols.shape
+    bn = a.block[1]
+    nb = a.shape[1] // bn
+    # Active tile-columns from frontier indices (pad index n → dropped).
+    active_cols = jnp.zeros((nb,), jnp.bool_)
+    tile_idx = jnp.where(f.indices < f.n, f.indices // bn, nb)
+    active_cols = active_cols.at[tile_idx].set(True, mode="drop")
+    slot_active = active_cols[a.tile_cols]  # [mb, T]
+    # Padded slots hold identity tiles; they may alias tile-col 0 but are
+    # harmless (identity contribution) — no need to exclude them.
+    perm = jnp.argsort(~slot_active, axis=1, stable=True).astype(jnp.int32)
+    n_active = jnp.sum(slot_active, axis=1, dtype=jnp.int32)
+    cols_perm = jnp.take_along_axis(a.tile_cols, perm, axis=1)
+    return jnp.concatenate([n_active[:, None], perm, cols_perm], axis=1)
+
+
+def semiring_spmspv(a: PaddedBSR, f: Frontier, sr: Semiring,
+                    interpret: bool | None = None) -> Array:
+    """y = A ⊕.⊗ x with x given as a sparse Frontier. Only active column
+    tiles are streamed (the paper's CSC-SpMSpV work-skipping, at tile
+    granularity)."""
+    itp = INTERPRET if interpret is None else interpret
+    meta = _spmspv_meta(a, f, sr)
+    x_dense = f.to_dense(sr)
+    pad = a.shape[1] - x_dense.shape[0]
+    if pad:
+        x_dense = jnp.pad(x_dense, (0, pad), constant_values=sr.zero)
+    return semiring_spmspv_padded(a.tiles, meta, x_dense, sr=sr, interpret=itp)
+
+
+def moe_dispatch_gather(x: Array, slot_tok: Array, block_d: int = 128,
+                        interpret: bool | None = None) -> Array:
+    """Expert-buffer row gather (tile-SpMSpV analogue; DESIGN.md §5):
+    out[s] = x[slot_tok[s]], zero rows for padded slots."""
+    from repro.kernels.moe_dispatch import moe_dispatch_gather as _k
+    itp = INTERPRET if interpret is None else interpret
+    return _k(x, slot_tok, block_d=block_d, interpret=itp)
+
+
+def moe_dispatch_gather_ref(x: Array, slot_tok: Array) -> Array:
+    return ref.moe_dispatch_gather_ref(x, slot_tok)
+
+
+def semiring_spmv_ref(a: PaddedBSR, x: Array, sr: Semiring) -> Array:
+    return ref.spmv_padded_ref(a.tiles, a.tile_cols, x.astype(sr.dtype), sr)
+
+
+def semiring_spmspv_ref(a: PaddedBSR, f: Frontier, sr: Semiring) -> Array:
+    meta = _spmspv_meta(a, f, sr)
+    x_dense = f.to_dense(sr)
+    pad = a.shape[1] - x_dense.shape[0]
+    if pad:
+        x_dense = jnp.pad(x_dense, (0, pad), constant_values=sr.zero)
+    return ref.spmspv_padded_ref(a.tiles, meta, x_dense, sr)

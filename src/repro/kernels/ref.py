@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel (required ref.py layer).
+
+These are the ground truth the kernels' interpret-mode outputs are
+assert_allclose'd against in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.semiring import Semiring
+
+Array = jax.Array
+
+
+def spmv_padded_ref(tiles: Array, tile_cols: Array, x: Array, sr: Semiring) -> Array:
+    """Oracle for semiring_spmv_padded: dense loop over the ELL-of-tiles
+    layout. tiles [mb, T, bm, bn]; tile_cols [mb, T]; x [nb*bn]."""
+    mb, t, bm, bn = tiles.shape
+    x_blocks = x.reshape(-1, bn)
+
+    def row(i):
+        def slot(j, acc):
+            a = tiles[i, j].astype(sr.dtype)
+            xb = x_blocks[tile_cols[i, j]].astype(sr.dtype)
+            contrib = sr.add_reduce(sr.mul(a, xb[None, :]), axis=1)
+            return sr.add(acc, contrib)
+
+        acc0 = jnp.full((bm,), sr.zero, dtype=sr.dtype)
+        return jax.lax.fori_loop(0, t, slot, acc0)
+
+    return jax.vmap(row)(jnp.arange(mb)).reshape(-1).astype(x.dtype)
+
+
+def moe_dispatch_gather_ref(x: Array, slot_tok: Array) -> Array:
+    """Oracle for kernels/moe_dispatch.py: out[s] = x[slot_tok[s]], zero
+    rows for padded slots (slot_tok == T)."""
+    t = x.shape[0]
+    ok = slot_tok < t
+    safe = jnp.minimum(slot_tok, t - 1)
+    return jnp.where(ok[:, None], x[safe], 0).astype(x.dtype)
+
+
+def spmspv_padded_ref(tiles: Array, meta: Array, x: Array, sr: Semiring) -> Array:
+    """Oracle for semiring_spmspv_padded. meta [mb, 1+2T] =
+    (n_active, slot-perm..., permuted tile-cols...); only the first
+    n_active permuted slots of each row contribute."""
+    mb, t, bm, bn = tiles.shape
+    x_blocks = x.reshape(-1, bn)
+
+    def row(i):
+        n_active = meta[i, 0]
+
+        def slot(j, acc):
+            s = meta[i, 1 + j]
+            a = tiles[i, s].astype(sr.dtype)
+            xb = x_blocks[meta[i, 1 + t + j]].astype(sr.dtype)
+            contrib = sr.add_reduce(sr.mul(a, xb[None, :]), axis=1)
+            return sr.add(acc, jnp.where(j < n_active, contrib, sr.zero))
+
+        acc0 = jnp.full((bm,), sr.zero, dtype=sr.dtype)
+        return jax.lax.fori_loop(0, t, slot, acc0)
+
+    return jax.vmap(row)(jnp.arange(mb)).reshape(-1).astype(x.dtype)

@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: semiring block-sparse (BSR) SpMV.
+
+TPU adaptation of the paper's CSC/CSR element kernels (DESIGN.md §2):
+UPMEM DPUs chase per-column pointers with a scalar core; the TPU MXU/VPU
+wants dense (bm, bn) tiles. The sparse structure therefore lives at *tile*
+granularity — CSR-of-tiles metadata drives a scalar-prefetched BlockSpec
+index map, so only stored tiles are DMA'd HBM→VMEM (the WRAM staging step
+of §4.1.3, with BlockSpec playing the role of the DPU's DMA engine).
+
+Layout (produced by ops.bsr_to_padded):
+    tiles     f32/i32 [mb, T, bm, bn]   ELL-of-tiles, padded with ⊕-identity tiles
+    tile_cols i32     [mb, T]           tile-column index (pad: 0, payload is identity)
+    x         [nb * bn]                 dense input vector
+    y         [mb * bm]                 output
+
+Grid (mb, T): for each block row i, sequentially ⊕-accumulate tile j's dense
+matvec into y block i. ⟨+,×⟩ uses jnp.dot → MXU; ⟨min,+⟩ / ⟨∨,∧⟩ use VPU
+elementwise + reduce. Accumulation across the T grid dim revisits the same
+output block, the standard TPU reduction pattern.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.semiring import Semiring
+
+
+def _kernel(cols_ref, tiles_ref, x_ref, y_ref, *, sr: Semiring, t_grid: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = jnp.full_like(y_ref, sr.zero)
+
+    a = tiles_ref[0, 0]          # [bm, bn]
+    xb = x_ref[...]              # [bn]
+    if sr.collective == "psum":
+        contrib = jnp.dot(a, xb, preferred_element_type=jnp.float32).astype(y_ref.dtype)
+    else:
+        # VPU path: broadcast ⊗ then ⊕-reduce along the tile column.
+        contrib = sr.add_reduce(sr.mul(a, xb[None, :]), axis=1)
+    y_ref[...] = sr.add(y_ref[...], contrib)
+
+
+@functools.partial(jax.jit, static_argnames=("sr", "interpret"))
+def semiring_spmv_padded(tiles, tile_cols, x, *, sr: Semiring, interpret: bool = True):
+    """y = A ⊕.⊗ x over the padded ELL-of-tiles layout."""
+    mb, t_grid, bm, bn = tiles.shape
+    grid = (mb, t_grid)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, sr=sr, t_grid=t_grid),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                # tile payload: one (bm, bn) tile per step
+                pl.BlockSpec((1, 1, bm, bn), lambda i, j, cols: (i, j, 0, 0)),
+                # x block selected by the scalar-prefetched tile-column index
+                pl.BlockSpec((bn,), lambda i, j, cols: (cols[i, j],)),
+            ],
+            out_specs=pl.BlockSpec((bm,), lambda i, j, cols: (i,)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((mb * bm,), x.dtype),
+        interpret=interpret,
+    )(tile_cols, tiles, x)

@@ -1,0 +1,268 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape) cell, on the 16x16 single-pod mesh
+and the 2x16x16 multi-pod mesh:
+
+    jax.jit(step, in_shardings=..., out_shardings=...).lower(**specs).compile()
+
+then record memory_analysis (per-chip bytes — proves HBM fit),
+cost_analysis (FLOPs/bytes for the roofline), and the HLO collective-bytes
+parse, into one JSON per cell under --out.
+
+Shapes: train_4k lowers train_step; prefill_32k lowers prefill_step;
+decode_32k / long_500k lower serve_step (one token, seq_len-capacity cache).
+
+Usage:
+    python -m repro.launch.dryrun --arch deepseek-7b --shape train_4k
+    python -m repro.launch.dryrun --all [--mesh single|multi|both]
+"""
+import argparse
+import gc
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import (
+    param_shardings, set_activation_mesh, zero1_shardings,
+)
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import SHAPES
+from repro.models.transformer import Model
+from repro.models.zoo import (
+    ARCH_IDS, active_params, arch_shapes, count_params, get_config,
+    input_specs,
+)
+from repro.serve.engine import make_prefill_step, make_serve_step
+from repro.serve.kv_cache import cache_shardings
+from repro.train.optimizer import OptState
+from repro.train.train_loop import (
+    TrainConfig, batch_sharding, train_step_fn,
+)
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic useful FLOPs: 6·N_active·tokens (train), 2·N_active·tokens
+    (prefill/decode). Attention score FLOPs excluded by convention."""
+    n_act = active_params(cfg)
+    if shape.kind == "train":
+        return 6.0 * n_act * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_act * shape.tokens
+    return 2.0 * n_act * shape.global_batch        # one token per request
+
+
+# Per-arch microbatch overrides (§Perf): fewer microbatches = fewer FSDP
+# weight re-gathers per step; bounded by activation HBM. mixtral mb=8 is the
+# fit-constrained optimum (mb=4 -> 12.5 GB temps + args > 16 GB).
+MB_OVERRIDES = {"mixtral-8x22b": 8}
+
+
+def serving_config(cfg, shape):
+    """Serving overrides: (1) hybrid archs window their shared attention
+    sites at 500k (full shared attention would carry an O(S) cache per
+    site — §Perf records the 81x memory-term delta); (2) MoE inference uses
+    capacity factor 1.0 (the training headroom only buys dispatch-buffer
+    bytes at prefill scale: 1.9 GB/chip on mixtral prefill_32k)."""
+    import dataclasses
+    if shape.name == "long_500k" and cfg.hybrid is not None \
+            and not cfg.hybrid.attn_window:
+        cfg = dataclasses.replace(
+            cfg, hybrid=dataclasses.replace(cfg.hybrid, attn_window=4096))
+    if shape.kind != "train" and cfg.moe is not None \
+            and cfg.moe.capacity_factor > 1.0:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=1.0))
+    return cfg
+
+
+def lower_cell(arch_id: str, shape_name: str, mesh, tcfg: TrainConfig):
+    """Build + lower + compile one cell. Returns (record, lowered, compiled)."""
+    import dataclasses as _dc
+    shape = SHAPES[shape_name]
+    cfg = serving_config(get_config(arch_id), shape)
+    if shape.kind == "train":
+        mb = MB_OVERRIDES.get(arch_id, tcfg.microbatches)
+        # divisibility clamp: each microbatch's rows must still cover every
+        # (pod x data) rank — otherwise the batch constraint is dropped and
+        # the whole step silently replicates (probed: +25-50 GB temps on
+        # every multi-pod train cell at mb=16)
+        dsize = 1
+        for a in ("pod", "data"):
+            if a in mesh.axis_names:
+                dsize *= mesh.shape[a]
+        mb = max(1, min(mb, shape.global_batch // dsize))
+        tcfg = _dc.replace(tcfg, microbatches=mb)
+    model = Model(cfg)
+    set_activation_mesh(mesh)       # activation-layout constraints see it
+    specs = model.specs()
+    p_sh = param_shardings(mesh, specs)
+    ins = input_specs(cfg, shape)
+    from repro.models.params import shape_struct
+    p_struct = shape_struct(specs)
+
+    if shape.kind == "train":
+        opt_sh = OptState(
+            step=NamedSharding(mesh, P()),
+            master=zero1_shardings(mesh, specs),
+            mu=zero1_shardings(mesh, specs),
+            nu=zero1_shardings(mesh, specs),
+        )
+        opt_struct = OptState(
+            step=jax.ShapeDtypeStruct((), np.int32),
+            master=jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, np.float32), p_struct),
+            mu=jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, np.float32), p_struct),
+            nu=jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, np.float32), p_struct),
+        )
+        b_sh = batch_sharding(mesh, ins["batch"])
+        step = train_step_fn(model, tcfg)
+        jitted = jax.jit(step, in_shardings=(p_sh, opt_sh, b_sh),
+                         out_shardings=(p_sh, opt_sh, None))
+        lowered = jitted.lower(p_struct, opt_struct, ins["batch"])
+    elif shape.kind == "prefill":
+        c_sh = cache_shardings(mesh, cfg, shape.global_batch, shape.seq_len)
+        b_sh = batch_sharding(mesh, ins["batch"])
+        step = make_prefill_step(model)
+        jitted = jax.jit(step, in_shardings=(p_sh, b_sh, c_sh),
+                         out_shardings=(None, c_sh))
+        lowered = jitted.lower(p_struct, ins["batch"], ins["cache"])
+    else:  # decode
+        c_sh = cache_shardings(mesh, cfg, shape.global_batch, shape.seq_len)
+        data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        dsize = int(np.prod([mesh.shape[a] for a in data_axes])) or 1
+        t_ax = data_axes if shape.global_batch % dsize == 0 else None
+        t_sh = NamedSharding(mesh, P(t_ax, None))
+        step = make_serve_step(model)
+        if cfg.family == "vlm":
+            v_sh = NamedSharding(mesh, P(t_ax, None, None))
+            jitted = jax.jit(step, in_shardings=(p_sh, t_sh, c_sh, v_sh),
+                             out_shardings=(t_sh, None, c_sh))
+            lowered = jitted.lower(p_struct, ins["token"], ins["cache"],
+                                   ins["vision_kv"])
+        else:
+            jitted = jax.jit(step, in_shardings=(p_sh, t_sh, c_sh),
+                             out_shardings=(t_sh, None, c_sh))
+            lowered = jitted.lower(p_struct, ins["token"], ins["cache"])
+
+    t0 = time.monotonic()
+    compiled = lowered.compile()
+    compile_s = time.monotonic() - t0
+
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    ana = hlo_analysis.analyze(hlo, n_dev, pod_size=256)
+    terms = hlo_analysis.roofline_terms(ana)
+
+    cfg_obj = get_config(arch_id)
+    mf = model_flops(cfg_obj, shape)
+    record = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": dict(mesh.shape),
+        "devices": n_dev,
+        "compile_s": compile_s,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        # raw XLA aggregates (while bodies counted once — reference only)
+        "cost_raw": {"flops_per_device": float(cost.get("flops", 0.0)),
+                     "bytes_per_device": float(cost.get("bytes accessed", 0.0))},
+        # loop-corrected structural analysis (the roofline source)
+        "cost": {"flops_per_device": ana.flops,
+                 "hbm_bytes_per_device": ana.hbm_bytes},
+        "collectives": {
+            "wire_bytes_per_device": ana.wire_bytes,
+            "ici_bytes": ana.ici_bytes,
+            "dcn_bytes": ana.dcn_bytes,
+            "by_kind": ana.by_kind,
+            "n_ops": ana.n_collectives,
+            "unknown_trip_loops": ana.unknown_trip_loops,
+        },
+        "roofline": terms,
+        "model_flops_total": mf,
+        "model_flops_per_device": mf / n_dev,
+        "useful_flops_ratio": (mf / n_dev) / ana.flops if ana.flops else None,
+        "params_total": count_params(cfg_obj),
+        "params_active": active_params(cfg_obj),
+    }
+    return record, lowered, compiled
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_kind: str, out_dir: str,
+             tcfg: TrainConfig) -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    record, _, compiled = lower_cell(arch_id, shape_name, mesh, tcfg)
+    os.makedirs(out_dir, exist_ok=True)
+    fname = f"{arch_id}__{shape_name}__{mesh_kind}.json".replace("/", "_")
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(record, f, indent=1)
+    del compiled
+    gc.collect()
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--microbatches", type=int, default=16)
+    args = ap.parse_args()
+
+    tcfg = TrainConfig(microbatches=args.microbatches, remat=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    cells = []
+    if args.all:
+        for aid in ARCH_IDS:
+            for sname in arch_shapes(get_config(aid)):
+                cells.append((aid, sname))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for aid, sname in cells:
+        for mk in meshes:
+            tag = f"{aid} x {sname} x {mk}"
+            try:
+                t0 = time.monotonic()
+                rec = run_cell(aid, sname, mk, args.out, tcfg)
+                r = rec["roofline"]
+                print(f"[ok] {tag}: compile={rec['compile_s']:.1f}s "
+                      f"compute={r['compute_s']*1e3:.2f}ms "
+                      f"memory={r['memory_s']*1e3:.2f}ms "
+                      f"coll={r['collective_s']*1e3:.2f}ms "
+                      f"dominant={r['dominant']} "
+                      f"(wall {time.monotonic()-t0:.0f}s)", flush=True)
+            except Exception as e:
+                failures.append((tag, repr(e)))
+                print(f"[FAIL] {tag}: {e}", flush=True)
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for t, e in failures:
+            print(" ", t, e)
+        raise SystemExit(1)
+    print(f"\nall {len(cells) * len(meshes)} cells passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+import os
+if "jax" not in __import__("sys").modules:
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=512")
+
+"""Dry-run profiler: per-op contributor breakdown of the structural HLO
+analysis — the 'profile' of the hypothesis->change->measure loop (§Perf).
+
+    python -m repro.launch.hlo_profile --arch zamba2-1.2b --shape long_500k
+"""
+import argparse
+import collections
+
+from repro.launch import hlo_analysis as H
+
+
+def contributors(hlo: str, n_devices: int, pod_size: int = 256, top: int = 15):
+    comps, entry = H.parse_module(hlo)
+    contrib = collections.Counter()
+    coll = collections.Counter()
+    lines = {}
+
+    def walk(name, mult, seen):
+        if name not in comps or name in seen:
+            return
+        c = comps[name]
+        for on in c.order:
+            op = c.ops[on]
+            oc = op.opcode
+            if oc == "while":
+                m = H._TRIP_RE.search(op.line)
+                t = int(m.group(1)) if m else 1
+                for cc in H._called(op.line):
+                    walk(cc, mult * t, seen | {name})
+            elif oc in ("call", "conditional"):
+                for cc in H._called(op.line):
+                    walk(cc, mult, seen | {name})
+            elif any(oc.startswith(k) for k in H.COLLECTIVES):
+                coll[(name[:44], oc)] += mult * op.result_bytes
+                lines.setdefault((name[:44], oc), op.line.strip()[:170])
+            elif oc == "dot":
+                b = op.result_bytes + H.operand_bytes(op, c)
+                key = (name[:44], f"dot:{on[:36]}")
+                contrib[key] += mult * b
+                lines.setdefault(key, op.line.strip()[:170])
+            else:
+                b = H.top_level_bytes(op, c, comps)
+                if not b:
+                    continue
+                key = (name[:44], f"{oc}:{on[:36]}")
+                contrib[key] += mult * b
+                lines.setdefault(key, op.line.strip()[:170])
+
+    walk(entry, 1.0, frozenset())
+    print(f"total HBM bytes {sum(contrib.values())/1e9:.1f} GB, "
+          f"collective result bytes {sum(coll.values())/1e9:.1f} GB")
+    print("--- top HBM contributors")
+    for k, v in contrib.most_common(top):
+        print(f"{v/1e9:9.2f} GB  {k[0]} :: {k[1]}")
+        print(f"      {lines[k]}")
+    print("--- top collectives")
+    for k, v in coll.most_common(top // 2):
+        print(f"{v/1e9:9.2f} GB  {k[0]} :: {k[1]}")
+        print(f"      {lines[k]}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--microbatches", type=int, default=16)
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import lower_cell
+    from repro.launch.mesh import make_production_mesh
+    from repro.train.train_loop import TrainConfig
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    rec, lo, co = lower_cell(args.arch, args.shape, mesh,
+                             TrainConfig(microbatches=args.microbatches,
+                                         remat=True))
+    r = rec["roofline"]
+    print(f"{args.arch} x {args.shape} x {args.mesh}: "
+          f"compute={r['compute_s']*1e3:.2f}ms memory={r['memory_s']*1e3:.2f}ms "
+          f"collective={r['collective_s']*1e3:.2f}ms dominant={r['dominant']}")
+    n_dev = rec["devices"]
+    contributors(co.as_text(), n_dev, top=args.top)
+
+
+if __name__ == "__main__":
+    main()

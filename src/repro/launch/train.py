@@ -1,0 +1,143 @@
+"""Training launcher (CPU-scale runs of the real distributed code path).
+
+Example:
+    PYTHONPATH=src python -m repro.launch.train --arch minitron-4b \
+        --scale 0.02 --steps 50 --data 2 --model 2
+uses a width/depth-scaled variant of the arch config so a ~100M-param run
+fits CPU; the train step, sharding rules, checkpointing and fault-tolerance
+driver are exactly the production ones.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+
+
+def scaled_config(cfg, scale: float):
+    """Geometry-scaled variant of an arch config (same family/topology)."""
+    def r8(x):
+        return max(8, int(x * scale) // 8 * 8)
+
+    moe = cfg.moe
+    if moe is not None:
+        moe = dataclasses.replace(
+            moe, d_ff_expert=r8(moe.d_ff_expert),
+            d_ff_dense=r8(moe.d_ff_dense) if moe.d_ff_dense else 0,
+            n_experts=min(moe.n_experts, 8),
+            top_k=min(moe.top_k, min(moe.n_experts, 8)))
+    mla = cfg.mla
+    if mla is not None:
+        mla = dataclasses.replace(
+            mla, kv_lora_rank=r8(mla.kv_lora_rank),
+            rope_head_dim=max(8, r8(mla.rope_head_dim)),
+            nope_head_dim=max(8, r8(mla.nope_head_dim)),
+            v_head_dim=max(8, r8(mla.v_head_dim)))
+    n_heads = max(2, int(cfg.n_heads * scale) or 2)
+    d_model = r8(cfg.d_model)
+    # keep head structure consistent
+    while d_model % n_heads:
+        n_heads -= 1
+    n_kv = max(1, min(cfg.n_kv_heads, n_heads))
+    while n_heads % n_kv:
+        n_kv -= 1
+    return dataclasses.replace(
+        cfg,
+        n_layers=max(2, int(cfg.n_layers * scale)),
+        d_model=d_model,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        d_ff=r8(cfg.d_ff) if cfg.d_ff else 0,
+        vocab=min(cfg.vocab, 8192),
+        head_dim=r8(cfg.head_dim) if cfg.head_dim else 0,
+        sliding_window=min(cfg.sliding_window, 64) if cfg.sliding_window else 0,
+        moe=moe, mla=mla,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minitron-4b")
+    ap.add_argument("--scale", type=float, default=0.05)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--pod", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--compress-pod", action="store_true")
+    args = ap.parse_args()
+
+    n_dev = max(1, args.pod) * args.data * args.model
+    if n_dev > 1:
+        os.environ.setdefault(
+            "XLA_FLAGS", f"--xla_force_host_platform_device_count={n_dev}")
+
+    import jax
+    import jax.numpy as jnp
+    from repro.distributed.fault_tolerance import FTConfig, TrainDriver
+    from repro.launch.mesh import small_mesh
+    from repro.models.transformer import Model
+    from repro.models.zoo import get_config
+    from repro.train.data import DataConfig, make_source
+    from repro.train.grad_compress import ef_init
+    from repro.train.optimizer import OptConfig, adamw_init
+    from repro.train.train_loop import (
+        TrainConfig, batch_sharding, make_compressed_train_step,
+        make_train_step,
+    )
+
+    cfg = scaled_config(get_config(args.arch), args.scale)
+    model = Model(cfg)
+    mesh = small_mesh(args.data, args.model, args.pod)
+    print(f"arch={args.arch} scaled params="
+          f"{sum(int(jnp.prod(jnp.array(l.shape))) for l in jax.tree.leaves(model.param_struct()))/1e6:.1f}M "
+          f"mesh={dict(mesh.shape)}")
+
+    tcfg = TrainConfig(
+        opt=OptConfig(lr=args.lr, warmup_steps=10, total_steps=args.steps),
+        microbatches=args.microbatches, remat=True,
+        grad_compress_pod=args.compress_pod)
+
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = adamw_init(params)
+
+    dcfg = DataConfig(global_batch=args.global_batch, seq_len=args.seq,
+                      vocab=cfg.vocab,
+                      frontend=cfg.frontend, frontend_dim=cfg.frontend_dim)
+    source = make_source(dcfg)
+    b_sh = None
+
+    if args.compress_pod and args.pod:
+        step = make_compressed_train_step(model, mesh, tcfg)
+        ef = ef_init(params)
+
+        def step_fn(p, o, batch):
+            nonlocal ef
+            p, o, ef, m = step(p, o, ef, batch)
+            return p, o, m
+    else:
+        raw_step = make_train_step(model, mesh, tcfg, donate=False)
+
+        def step_fn(p, o, batch):
+            return raw_step(p, o, batch)
+
+    def batch_fn(step_idx):
+        host = source.batch(step_idx, 0, 1)
+        return {k: jnp.asarray(v) for k, v in host.items()}
+
+    driver = TrainDriver(step_fn, batch_fn,
+                         FTConfig(ckpt_dir=args.ckpt_dir,
+                                  ckpt_every=args.ckpt_every))
+    out = driver.run(params, opt_state, args.steps)
+    h = out["history"]
+    print(f"steps={out['final_step']} restarts={out['restarts']} "
+          f"loss[0]={h[0]['loss']:.3f} loss[-1]={h[-1]['loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

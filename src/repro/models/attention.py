@@ -1,0 +1,264 @@
+"""Attention variants: GQA self-attention (train/prefill/decode + ring-buffer
+SWA cache), DeepSeek-V2 MLA (compressed-latent cache, absorbed decode), and
+gated cross-attention (VLM)."""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import MLAConfig, ModelConfig
+from repro.distributed.sharding import constrain_attention, constrain_block_out
+from repro.models.layers import (
+    KVCache, QuantKVCache, cache_update, decode_attention, flash_attention,
+    quant_cache_update, rms_norm, rope,
+)
+from repro.models.params import P_
+
+Array = jax.Array
+
+
+# ----------------------------- GQA self-attention --------------------------
+
+def gqa_specs(cfg: ModelConfig, layer_dim: Tuple[int, ...] = (),
+              layer_names: Tuple[str, ...] = ()) -> dict:
+    hd = cfg.resolved_head_dim
+    d = cfg.d_model
+    ld, ln = layer_dim, layer_names
+    specs = {
+        "wq": P_(ld + (d, cfg.n_heads * hd), ln + ("embed", "qk_fused"), dtype=cfg.dtype),
+        "wk": P_(ld + (d, cfg.n_kv_heads * hd), ln + ("embed", "qk_fused"), dtype=cfg.dtype),
+        "wv": P_(ld + (d, cfg.n_kv_heads * hd), ln + ("embed", "qk_fused"), dtype=cfg.dtype),
+        "wo": P_(ld + (cfg.n_heads * hd, d), ln + ("qk_fused", "embed"), dtype=cfg.dtype),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = P_(ld + (cfg.n_heads * hd,), ln + ("qk_fused",), init="zeros", dtype=cfg.dtype)
+        specs["bk"] = P_(ld + (cfg.n_kv_heads * hd,), ln + ("qk_fused",), init="zeros", dtype=cfg.dtype)
+        specs["bv"] = P_(ld + (cfg.n_kv_heads * hd,), ln + ("qk_fused",), init="zeros", dtype=cfg.dtype)
+    return specs
+
+
+def _qkv(p: dict, x: Array, cfg: ModelConfig, positions: Array):
+    hd = cfg.resolved_head_dim
+    b, t, _ = x.shape
+    q = jnp.einsum("btd,dk->btk", x, p["wq"])
+    k = jnp.einsum("btd,dk->btk", x, p["wk"])
+    v = jnp.einsum("btd,dk->btk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, t, cfg.n_heads, hd)
+    k = k.reshape(b, t, cfg.n_kv_heads, hd)
+    v = v.reshape(b, t, cfg.n_kv_heads, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return constrain_attention(q, k, v)
+
+
+def gqa_forward(p: dict, x: Array, cfg: ModelConfig, *,
+                causal: bool = True, q_offset: Array | int = 0) -> Array:
+    """Training / prefill self-attention (no cache returned)."""
+    b, t, _ = x.shape
+    positions = q_offset + jnp.arange(t)
+    q, k, v = _qkv(p, x, cfg, positions[None, :])
+    o = flash_attention(q, k, v, causal=causal, window=cfg.sliding_window,
+                        q_offset=q_offset)
+    return constrain_block_out(
+        jnp.einsum("btk,kd->btd", o.reshape(b, t, -1), p["wo"]))
+
+
+def gqa_prefill(p: dict, x: Array, cfg: ModelConfig, cache: KVCache
+                ) -> Tuple[Array, KVCache]:
+    b, t, _ = x.shape
+    positions = cache.pos + jnp.arange(t)
+    q, k, v = _qkv(p, x, cfg, positions[None, :])
+    o = flash_attention(q, k, v, causal=True, window=cfg.sliding_window,
+                        q_offset=cache.pos)
+    upd = quant_cache_update if isinstance(cache, QuantKVCache) else cache_update
+    if cfg.sliding_window and cache.k.shape[1] == cfg.sliding_window:
+        w = cfg.sliding_window
+        # keep only the last `window` tokens in ring order
+        kk, vv = k[:, -w:], v[:, -w:]
+        new_cache = upd(cache, kk, vv, window=w)
+        new_cache = new_cache._replace(pos=cache.pos + t)
+    else:
+        new_cache = upd(cache, k, v)
+    out = constrain_block_out(
+        jnp.einsum("btk,kd->btd", o.reshape(b, t, -1), p["wo"]))
+    return out, new_cache
+
+
+def gqa_decode(p: dict, x: Array, cfg: ModelConfig, cache: KVCache
+               ) -> Tuple[Array, KVCache]:
+    """Single-token decode. x [B,1,D]."""
+    b, t, _ = x.shape
+    positions = cache.pos + jnp.arange(t)
+    q, k, v = _qkv(p, x, cfg, positions[None, :])
+    upd = quant_cache_update if isinstance(cache, QuantKVCache) else cache_update
+    new_cache = upd(cache, k, v, window=cfg.sliding_window or 0)
+    o = decode_attention(q, new_cache, window=cfg.sliding_window)
+    out = constrain_block_out(
+        jnp.einsum("btk,kd->btd", o.reshape(b, t, -1), p["wo"]))
+    return out, new_cache
+
+
+def gqa_cache_spec(cfg: ModelConfig, batch: int, max_seq: int,
+                   layer_dim: Tuple[int, ...]):
+    hd = cfg.resolved_head_dim
+    s = min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+    shape = layer_dim + (batch, s, cfg.n_kv_heads, hd)
+    if cfg.kv_quant:
+        sshape = layer_dim + (batch, s)
+        return QuantKVCache(
+            k=jax.ShapeDtypeStruct(shape, jnp.int8),
+            v=jax.ShapeDtypeStruct(shape, jnp.int8),
+            k_scale=jax.ShapeDtypeStruct(sshape, jnp.float32),
+            v_scale=jax.ShapeDtypeStruct(sshape, jnp.float32),
+            pos=jax.ShapeDtypeStruct(layer_dim, jnp.int32),
+        )
+    return KVCache(
+        k=jax.ShapeDtypeStruct(shape, cfg.dtype),
+        v=jax.ShapeDtypeStruct(shape, cfg.dtype),
+        pos=jax.ShapeDtypeStruct(layer_dim, jnp.int32),
+    )
+
+
+# --------------------------------- MLA -------------------------------------
+
+class MLACache(NamedTuple):
+    c_kv: Array    # [B, S, kv_lora] compressed latents
+    k_rope: Array  # [B, S, rope_dim] shared rotary key
+    pos: Array
+
+
+def mla_specs(cfg: ModelConfig, layer_dim=(), layer_names=()) -> dict:
+    m: MLAConfig = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qd = m.nope_head_dim + m.rope_head_dim
+    ld, ln = layer_dim, layer_names
+    return {
+        "wq": P_(ld + (d, h * qd), ln + ("embed", "qk_fused"), dtype=cfg.dtype),
+        "wkv_a": P_(ld + (d, m.kv_lora_rank + m.rope_head_dim), ln + ("embed", "kv_lora"), dtype=cfg.dtype),
+        "kv_norm": P_(ld + (m.kv_lora_rank,), ln + ("kv_lora",), init="ones", dtype=cfg.dtype),
+        "wk_b": P_(ld + (m.kv_lora_rank, h * m.nope_head_dim), ln + ("kv_lora", "qk_fused"), dtype=cfg.dtype),
+        "wv_b": P_(ld + (m.kv_lora_rank, h * m.v_head_dim), ln + ("kv_lora", "qk_fused"), dtype=cfg.dtype),
+        "wo": P_(ld + (h * m.v_head_dim, d), ln + ("qk_fused", "embed"), dtype=cfg.dtype),
+    }
+
+
+def _mla_qc(p: dict, x: Array, cfg: ModelConfig, positions: Array):
+    m = cfg.mla
+    b, t, _ = x.shape
+    h = cfg.n_heads
+    q = jnp.einsum("btd,dk->btk", x, p["wq"]).reshape(
+        b, t, h, m.nope_head_dim + m.rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.nope_head_dim], axis=-1)
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    kv = jnp.einsum("btd,dk->btk", x, p["wkv_a"])
+    c_kv, k_rope = jnp.split(kv, [m.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_forward(p: dict, x: Array, cfg: ModelConfig, *,
+                q_offset: Array | int = 0) -> Array:
+    """Expanded form (training/prefill): materialize per-head k/v."""
+    m = cfg.mla
+    b, t, _ = x.shape
+    h = cfg.n_heads
+    positions = (q_offset + jnp.arange(t))[None, :]
+    q_nope, q_rope, c_kv, k_rope = _mla_qc(p, x, cfg, positions)
+    k_nope = jnp.einsum("btl,lk->btk", c_kv, p["wk_b"]).reshape(b, t, h, m.nope_head_dim)
+    v = jnp.einsum("btl,lk->btk", c_kv, p["wv_b"]).reshape(b, t, h, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                                  (b, t, h, m.rope_head_dim))], axis=-1)
+    # pad v's head_dim up to qk dim for the shared flash kernel, then slice
+    pad = q.shape[-1] - m.v_head_dim
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad)))
+    q, k, vp = constrain_attention(q, k, vp)
+    o = flash_attention(q, k, vp, causal=True, q_offset=q_offset)[..., : m.v_head_dim]
+    return constrain_block_out(
+        jnp.einsum("btk,kd->btd", o.reshape(b, t, -1), p["wo"]))
+
+
+def mla_prefill(p: dict, x: Array, cfg: ModelConfig, cache: MLACache
+                ) -> Tuple[Array, MLACache]:
+    m = cfg.mla
+    b, t, _ = x.shape
+    positions = (cache.pos + jnp.arange(t))[None, :]
+    out = mla_forward(p, x, cfg, q_offset=cache.pos)
+    _, _, c_kv, k_rope = _mla_qc(p, x, cfg, positions)
+    new = MLACache(
+        jax.lax.dynamic_update_slice(cache.c_kv, c_kv.astype(cache.c_kv.dtype), (0, cache.pos, 0)),
+        jax.lax.dynamic_update_slice(cache.k_rope, k_rope.astype(cache.k_rope.dtype), (0, cache.pos, 0)),
+        cache.pos + t)
+    return out, new
+
+
+def mla_decode(p: dict, x: Array, cfg: ModelConfig, cache: MLACache
+               ) -> Tuple[Array, MLACache]:
+    """Absorbed decode: attention runs in the compressed latent space —
+    the cache stays [S, kv_lora+rope] instead of [S, H, 2·hd]."""
+    m = cfg.mla
+    b, t, _ = x.shape
+    h = cfg.n_heads
+    positions = (cache.pos + jnp.arange(t))[None, :]
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qc(p, x, cfg, positions)
+    cache = MLACache(
+        jax.lax.dynamic_update_slice(cache.c_kv, c_kv_new.astype(cache.c_kv.dtype), (0, cache.pos, 0)),
+        jax.lax.dynamic_update_slice(cache.k_rope, k_rope_new.astype(cache.k_rope.dtype), (0, cache.pos, 0)),
+        cache.pos + t)
+    wk_b = p["wk_b"].reshape(m.kv_lora_rank, h, m.nope_head_dim)
+    q_eff = jnp.einsum("bthn,lhn->bthl", q_nope, wk_b)       # absorb k up-proj
+    scale = 1.0 / jnp.sqrt(m.nope_head_dim + m.rope_head_dim)
+    s = (jnp.einsum("bthl,bsl->bhts", q_eff, cache.c_kv) +
+         jnp.einsum("bthr,bsr->bhts", q_rope, cache.k_rope)).astype(jnp.float32) * scale
+    valid = jnp.arange(cache.c_kv.shape[1])[None, None, None, :] < cache.pos
+    s = jnp.where(valid, s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1).astype(cache.c_kv.dtype)
+    o_c = jnp.einsum("bhts,bsl->bthl", pr, cache.c_kv)       # latent-space output
+    wv_b = p["wv_b"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    o = jnp.einsum("bthl,lhv->bthv", o_c, wv_b)              # absorb v up-proj
+    out = constrain_block_out(
+        jnp.einsum("btk,kd->btd", o.reshape(b, t, -1), p["wo"]))
+    return out, cache
+
+
+def mla_cache_spec(cfg: ModelConfig, batch: int, max_seq: int, layer_dim) -> MLACache:
+    m = cfg.mla
+    return MLACache(
+        c_kv=jax.ShapeDtypeStruct(layer_dim + (batch, max_seq, m.kv_lora_rank), cfg.dtype),
+        k_rope=jax.ShapeDtypeStruct(layer_dim + (batch, max_seq, m.rope_head_dim), cfg.dtype),
+        pos=jax.ShapeDtypeStruct(layer_dim, jnp.int32),
+    )
+
+
+# ----------------------------- cross-attention ------------------------------
+
+def cross_attn_specs(cfg: ModelConfig, layer_dim=(), layer_names=()) -> dict:
+    hd = cfg.resolved_head_dim
+    d = cfg.d_model
+    ld, ln = layer_dim, layer_names
+    return {
+        "wq": P_(ld + (d, cfg.n_heads * hd), ln + ("embed", "qk_fused"), dtype=cfg.dtype),
+        "wk": P_(ld + (d, cfg.n_kv_heads * hd), ln + ("embed", "qk_fused"), dtype=cfg.dtype),
+        "wv": P_(ld + (d, cfg.n_kv_heads * hd), ln + ("embed", "qk_fused"), dtype=cfg.dtype),
+        "wo": P_(ld + (cfg.n_heads * hd, d), ln + ("qk_fused", "embed"), dtype=cfg.dtype),
+        "gate": P_(ld + (1,), ln + (None,), init="zeros", dtype=cfg.dtype),
+    }
+
+
+def cross_attn(p: dict, x: Array, kv_src: Array, cfg: ModelConfig) -> Array:
+    """Gated cross-attention (llama-3.2-vision style): q from text, k/v from
+    the (already d_model-projected) vision sequence."""
+    hd = cfg.resolved_head_dim
+    b, t, _ = x.shape
+    s = kv_src.shape[1]
+    q = jnp.einsum("btd,dk->btk", x, p["wq"]).reshape(b, t, cfg.n_heads, hd)
+    k = jnp.einsum("bsd,dk->bsk", kv_src, p["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = jnp.einsum("bsd,dk->bsk", kv_src, p["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+    o = flash_attention(q, k, v, causal=False)
+    out = jnp.einsum("btk,kd->btd", o.reshape(b, t, -1), p["wo"])
+    return jnp.tanh(p["gate"]) * out

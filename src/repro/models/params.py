@@ -1,0 +1,64 @@
+"""Parameter-spec system: one definition serves init, eval_shape (dry-run)
+and sharding (divisibility-aware logical-axis rules)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class P_:
+    """Parameter spec: shape + logical dim names (for sharding rules) + init.
+
+    dims entries name each axis; the sharding rule table maps names to mesh
+    axes (dropping any that do not divide — jit rejects uneven in_shardings).
+    """
+
+    shape: Tuple[int, ...]
+    dims: Tuple[Optional[str], ...]
+    init: str = "normal"     # normal | zeros | ones | embed
+    scale: float = 1.0
+    dtype: object = jnp.bfloat16
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.dims), (self.shape, self.dims)
+
+
+def _init_leaf(spec: P_, key) -> Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    fan_in = spec.shape[0] if len(spec.shape) > 1 else max(spec.shape[0], 1)
+    if spec.init == "embed":
+        std = 1.0
+    else:
+        std = spec.scale / np.sqrt(fan_in)
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(spec.dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, P_)
+
+
+def init_params(tree, rng) -> dict:
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    vals = [_init_leaf(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def shape_struct(tree) -> dict:
+    """ShapeDtypeStruct pytree for .lower() — no allocation (dry-run)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), tree, is_leaf=is_spec)
+
+
+def spec_tree_map(fn, tree):
+    return jax.tree.map(fn, tree, is_leaf=is_spec)

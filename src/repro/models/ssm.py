@@ -1,0 +1,154 @@
+"""Sub-quadratic sequence mixers: a single chunked gated-linear-attention
+(GLA) core serves both Mamba2 (SSD duality: scalar per-head decay) and
+xLSTM's mLSTM (matrix memory with gating), plus a simplified sLSTM.
+
+Chunked form (chunk L): within a chunk the parallel (attention-like)
+computation runs on the MXU; across chunks a `lax.scan` carries the
+[B,H,Dk,Dv] state — linear in sequence length, O(1) decode state.
+
+Numerics: log-decay g ≤ 0 throughout, so every exponent in the chunked
+path (cum_i − cum_j for i ≥ j, total − cum_j) is ≤ 0 → no overflow.
+Simplifications vs the papers (documented in DESIGN.md): mLSTM uses a
+sigmoid input gate folded into k (the max-stabilizer exp-gate form is
+equivalent in exact arithmetic); sLSTM uses head-diagonal recurrence.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class GLAState(NamedTuple):
+    s: Array   # [B, H, Dk, Dv] matrix memory
+    n: Array   # [B, H, Dk]     normalizer (mLSTM); zeros when unused
+
+
+def gla_chunked(q: Array, k: Array, v: Array, g: Array, *,
+                chunk: int = 256, state: Optional[GLAState] = None,
+                normalize: bool = False) -> Tuple[Array, GLAState]:
+    """q/k [B,T,H,Dk], v [B,T,H,Dv], g [B,T,H] log-decay ≤ 0.
+    Returns y [B,T,H,Dv] and the final state."""
+    b, t, h, dk = q.shape
+    dv = v.shape[-1]
+    l = min(chunk, t)
+    n_chunks = -(-t // l)
+    pad = n_chunks * l - t
+    if pad:
+        zpad = lambda x: jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2))
+        q, k, v, g = zpad(q), zpad(k), zpad(v), zpad(g)
+
+    qs = q.reshape(b, n_chunks, l, h, dk).transpose(1, 0, 2, 3, 4)
+    ks = k.reshape(b, n_chunks, l, h, dk).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, n_chunks, l, h, dv).transpose(1, 0, 2, 3, 4)
+    gs = g.reshape(b, n_chunks, l, h).transpose(1, 0, 2, 3)
+
+    if state is None:
+        state = GLAState(jnp.zeros((b, h, dk, dv), jnp.float32),
+                         jnp.zeros((b, h, dk), jnp.float32))
+
+    causal = jnp.tril(jnp.ones((l, l), bool))
+
+    def step(carry, inp):
+        s, n = carry
+        qc, kc, vc, gc = inp                      # [B,L,H,*]
+        cum = jnp.cumsum(gc.astype(jnp.float32), axis=1)   # [B,L,H]
+        total = cum[:, -1]                         # [B,H]
+        # inter-chunk: y_i += (q_i · S) e^{cum_i}
+        y_inter = jnp.einsum("blhd,bhdv->blhv", qc.astype(jnp.float32), s)
+        y_inter = y_inter * jnp.exp(cum)[..., None]
+        # intra-chunk: pairwise decayed attention (l ≥ m)
+        dmat = cum[:, :, None, :] - cum[:, None, :, :]     # [B,L,L,H] cum_l − cum_m
+        dmat = jnp.where(causal[None, :, :, None], dmat, -jnp.inf)
+        att = jnp.einsum("blhd,bmhd->blmh", qc.astype(jnp.float32),
+                         kc.astype(jnp.float32)) * jnp.exp(dmat)
+        y_intra = jnp.einsum("blmh,bmhv->blhv", att, vc.astype(jnp.float32))
+        y = y_inter + y_intra
+        if normalize:
+            n_inter = jnp.einsum("blhd,bhd->blh", qc.astype(jnp.float32), n)
+            n_inter = n_inter * jnp.exp(cum)
+            n_intra = jnp.sum(att, axis=2)  # Σ_m decayed q·k — matches n's recursion
+            denom = jnp.abs(n_inter + n_intra)
+            y = y / jnp.maximum(denom, 1.0)[..., None]
+        # state update: S' = e^{total} S + Σ_m k_m e^{total−cum_m} v_mᵀ
+        kw = kc.astype(jnp.float32) * jnp.exp(total[:, None] - cum)[..., None]
+        s_new = jnp.exp(total)[..., None, None] * s + jnp.einsum(
+            "blhd,blhv->bhdv", kw, vc.astype(jnp.float32))
+        n_new = jnp.exp(total)[..., None] * n + jnp.sum(kw, axis=1)
+        return (GLAState(s_new, n_new)), y
+
+    state_f, ys = jax.lax.scan(step, state, (qs, ks, vs, gs))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, n_chunks * l, h, dv)
+    return y[:, :t].astype(v.dtype), state_f
+
+
+def gla_step(q: Array, k: Array, v: Array, g: Array, state: GLAState, *,
+             normalize: bool = False) -> Tuple[Array, GLAState]:
+    """Single-token recurrence. q/k [B,H,Dk], v [B,H,Dv], g [B,H]."""
+    dec = jnp.exp(g.astype(jnp.float32))
+    s_new = dec[..., None, None] * state.s + jnp.einsum(
+        "bhd,bhv->bhdv", k.astype(jnp.float32), v.astype(jnp.float32))
+    n_new = dec[..., None] * state.n + k.astype(jnp.float32)
+    y = jnp.einsum("bhd,bhdv->bhv", q.astype(jnp.float32), s_new)
+    if normalize:
+        denom = jnp.abs(jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32), n_new))
+        y = y / jnp.maximum(denom, 1.0)[..., None]
+    return y.astype(v.dtype), GLAState(s_new, n_new)
+
+
+def causal_conv1d(x: Array, w: Array, state: Optional[Array] = None
+                  ) -> Tuple[Array, Array]:
+    """Depthwise causal conv. x [B,T,C], w [K,C]. Returns (y, new_state
+    [B,K-1,C])."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    new_state = xp[:, -(k - 1):] if k > 1 else state
+    y = sum(xp[:, i: i + x.shape[1]] * w[i] for i in range(k))
+    return y, new_state
+
+
+# ------------------------------- sLSTM --------------------------------------
+# Head-diagonal simplification (DESIGN.md): the recurrence is elementwise per
+# channel, c_t = f_t·c_{t-1} + i_t·z_t, solved in parallel over T with an
+# associative scan; n_t normalizes like the paper's stabilizer state.
+
+def _linrec_combine(a, b):
+    """Associative combine for c_t = f_t·c_{t-1} + u_t pairs (f, u)."""
+    f1, u1 = a
+    f2, u2 = b
+    return f2 * f1, f2 * u1 + u2
+
+
+def slstm_scan(f: Array, i: Array, z: Array, o: Array,
+               state: Optional[Tuple[Array, Array]] = None
+               ) -> Tuple[Array, Tuple[Array, Array]]:
+    """Parallel sLSTM over a sequence. All inputs [B,T,C]:
+    f/i gates in (0,1), z cell input, o output gate.
+    Returns y [B,T,C] and final (c, n) state [B,C]."""
+    ff = f.astype(jnp.float32)
+    u = (i * z).astype(jnp.float32)
+    un = i.astype(jnp.float32)
+    if state is not None:
+        c0, n0 = state
+        # fold the carried state into the first step's additive term
+        u = u.at[:, 0].add(ff[:, 0] * c0)
+        un = un.at[:, 0].add(ff[:, 0] * n0)
+    _, c = jax.lax.associative_scan(_linrec_combine, (ff, u), axis=1)
+    _, n = jax.lax.associative_scan(_linrec_combine, (ff, un), axis=1)
+    y = o.astype(jnp.float32) * c / jnp.maximum(n, 1.0)
+    return y.astype(z.dtype), (c[:, -1], n[:, -1])
+
+
+def slstm_step(f: Array, i: Array, z: Array, o: Array,
+               state: Tuple[Array, Array]) -> Tuple[Array, Tuple[Array, Array]]:
+    """Single-token sLSTM recurrence. Inputs [B,C]; state (c, n) [B,C]."""
+    c0, n0 = state
+    c = f.astype(jnp.float32) * c0 + (i * z).astype(jnp.float32)
+    n = f.astype(jnp.float32) * n0 + i.astype(jnp.float32)
+    y = o.astype(jnp.float32) * c / jnp.maximum(n, 1.0)
+    return y.astype(z.dtype), (c, n)

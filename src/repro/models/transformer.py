@@ -1,0 +1,734 @@
+"""Model assembly for the architecture zoo (deliverable f).
+
+One `Model` class serves every family via *segments*: a segment is a stack of
+identical layers scanned with `lax.scan` over stacked parameters (keeps HLO
+size O(1) in depth — essential for the 64-layer dry-runs). Heterogeneous
+stacks (deepseek-v2's leading dense layer, xLSTM's sLSTM sites, zamba2's
+shared attention, the VLM's cross-attention sites) become either multiple
+segments or uniform group-scans (outer scan over groups, inner over members).
+
+Three execution modes share the layer bodies:
+  * train   — full-sequence forward, no cache, optional remat per layer
+  * prefill — full-sequence forward that also fills the caches
+  * decode  — single-token step against the caches
+
+Caches are pytrees with a leading per-layer (or per-site) dim, threaded
+through the scans as xs/ys.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.layers import KVCache, rms_norm, swiglu
+from repro.models.moe import moe_ffn
+from repro.models.params import P_, init_params, shape_struct
+from repro.models.ssm import (
+    GLAState, causal_conv1d, gla_chunked, gla_step, slstm_scan, slstm_step,
+)
+
+Array = jax.Array
+
+
+# ------------------------------- helpers ------------------------------------
+
+def tree_slice(tree, a: int, b: int):
+    """Slice the leading (layer) dim of every leaf: [L, ...] -> [b-a, ...]."""
+    return jax.tree.map(lambda x: x[a:b], tree)
+
+
+def tree_group(tree, groups: int, per: int):
+    """Reshape leading dim L=groups*per -> [groups, per, ...]."""
+    return jax.tree.map(
+        lambda x: x.reshape((groups, per) + x.shape[1:]), tree)
+
+
+def tree_ungroup(tree):
+    """[groups, per, ...] -> [groups*per, ...]."""
+    return jax.tree.map(
+        lambda x: x.reshape((-1,) + x.shape[2:]), tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class Ctx:
+    """Static + traced context shared by all layer bodies."""
+    cfg: ModelConfig
+    mode: str                      # train | prefill | decode
+    pos: Any = 0                   # scalar offset of token 0 (traced ok)
+    causal: bool = True
+    vision_kv: Any = None          # [B, Sv, D] projected vision sequence
+
+
+# --------------------------- layer bodies -----------------------------------
+# Each body: specs(cfg, ld, ln) -> spec dict;
+#            fwd(p, x, cache, ctx) -> (x, new_cache)   (cache may be None)
+
+def _norm_spec(cfg, ld, ln):
+    return P_(ld + (cfg.d_model,), ln + ("embed",), init="ones", dtype=cfg.dtype)
+
+
+def _mlp_specs(cfg, ld, ln, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "w1": P_(ld + (d, f), ln + ("embed", "mlp"), dtype=cfg.dtype),
+        "w3": P_(ld + (d, f), ln + ("embed", "mlp"), dtype=cfg.dtype),
+        "w2": P_(ld + (f, d), ln + ("mlp", "embed"), dtype=cfg.dtype),
+    }
+
+
+def _moe_specs(cfg, ld, ln):
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.d_ff_expert, m.n_experts
+    specs = {
+        "router": P_(ld + (d, e), ln + ("embed", "experts"), dtype=cfg.dtype),
+        "w1": P_(ld + (e, d, f), ln + ("experts", "embed", "expert_mlp"), dtype=cfg.dtype),
+        "w3": P_(ld + (e, d, f), ln + ("experts", "embed", "expert_mlp"), dtype=cfg.dtype),
+        "w2": P_(ld + (e, f, d), ln + ("experts", "expert_mlp", "embed"), dtype=cfg.dtype),
+    }
+    if m.n_shared:
+        fs = m.n_shared * f
+        specs["shared_w1"] = P_(ld + (d, fs), ln + ("embed", "mlp"), dtype=cfg.dtype)
+        specs["shared_w3"] = P_(ld + (d, fs), ln + ("embed", "mlp"), dtype=cfg.dtype)
+        specs["shared_w2"] = P_(ld + (fs, d), ln + ("mlp", "embed"), dtype=cfg.dtype)
+    return specs
+
+
+def _attn_fwd(p, x, cache, ctx: Ctx, kind: str):
+    """Dispatch GQA/MLA attention by mode. Returns (attn_out, new_cache)."""
+    cfg = ctx.cfg
+    if kind == "mla":
+        if ctx.mode == "train":
+            return attn.mla_forward(p, x, cfg, q_offset=ctx.pos), None
+        if ctx.mode == "prefill":
+            return attn.mla_prefill(p, x, cfg, cache)
+        return attn.mla_decode(p, x, cfg, cache)
+    if ctx.mode == "train":
+        return attn.gqa_forward(p, x, cfg, causal=ctx.causal,
+                                q_offset=ctx.pos), None
+    if ctx.mode == "prefill":
+        return attn.gqa_prefill(p, x, cfg, cache)
+    return attn.gqa_decode(p, x, cfg, cache)
+
+
+def make_attn_mlp_body(attn_kind: str, ffn: str, d_ff_dense: int = 0):
+    """Standard pre-norm transformer layer: attn + (mlp | moe)."""
+
+    def specs(cfg: ModelConfig, ld=(), ln=()):
+        s = {
+            "norm1": _norm_spec(cfg, ld, ln),
+            "attn": (attn.mla_specs if attn_kind == "mla" else attn.gqa_specs
+                     )(cfg, ld, ln),
+            "norm2": _norm_spec(cfg, ld, ln),
+        }
+        if ffn == "moe":
+            s["moe"] = _moe_specs(cfg, ld, ln)
+        else:
+            s["mlp"] = _mlp_specs(cfg, ld, ln, d_ff_dense or None)
+        return s
+
+    def fwd(p, x, cache, ctx: Ctx):
+        from repro.distributed.sharding import constrain_block_out
+        a, new_cache = _attn_fwd(p["attn"], rms_norm(x, p["norm1"], ctx.cfg.norm_eps),
+                                 cache, ctx, attn_kind)
+        x = x + a
+        h = rms_norm(x, p["norm2"], ctx.cfg.norm_eps)
+        if ffn == "moe":
+            if ctx.mode == "train":
+                # train mode carries no cache: the per-layer output slot
+                # transports the load-balance auxiliary instead
+                y, new_cache = moe_ffn(h, p["moe"], ctx.cfg.moe, with_aux=True)
+                x = x + y
+            else:
+                x = x + moe_ffn(h, p["moe"], ctx.cfg.moe)
+        else:
+            x = x + swiglu(h, p["mlp"]["w1"], p["mlp"]["w3"], p["mlp"]["w2"])
+        # pin the residual stream: the FFN/expert row-parallel partial sums
+        # must reduce HERE — left loose, XLA defers them into the next
+        # layer's dispatch scatter at [B,E,C,D] size (probed: 3 TB/step)
+        return constrain_block_out(x), new_cache
+
+    return specs, fwd
+
+
+def make_cross_body():
+    """Gated cross-attention site (VLM): x attends to the vision sequence."""
+
+    def specs(cfg: ModelConfig, ld=(), ln=()):
+        return {
+            "norm": _norm_spec(cfg, ld, ln),
+            "xattn": attn.cross_attn_specs(cfg, ld, ln),
+        }
+
+    def fwd(p, x, cache, ctx: Ctx):
+        # vision_kv is precomputed (static across decode); no cache mutation
+        if ctx.vision_kv is None:
+            return x, cache
+        h = rms_norm(x, p["norm"], ctx.cfg.norm_eps)
+        return x + attn.cross_attn(p["xattn"], h, ctx.vision_kv, ctx.cfg), cache
+
+    return specs, fwd
+
+
+# ------------------------------- mLSTM (xLSTM) -------------------------------
+
+def mlstm_specs(cfg: ModelConfig, ld=(), ln=()):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    h = cfg.n_heads
+    dk = di // h
+    return {
+        "norm": _norm_spec(cfg, ld, ln),
+        "w_in": P_(ld + (d, 2 * di), ln + ("embed", "mlp"), dtype=cfg.dtype),
+        "conv_w": P_(ld + (s.d_conv, di), ln + ("conv", "mlp"), init="normal",
+                     scale=0.5, dtype=cfg.dtype),
+        # block-diagonal per-head q/k projections (xLSTM style)
+        "wq": P_(ld + (h, dk, dk), ln + ("heads", None, None), dtype=cfg.dtype),
+        "wk": P_(ld + (h, dk, dk), ln + ("heads", None, None), dtype=cfg.dtype),
+        "w_gate": P_(ld + (d, 2 * h), ln + ("embed", None), init="zeros",
+                     dtype=cfg.dtype),
+        "f_bias": P_(ld + (h,), ln + (None,), init="ones", dtype=cfg.dtype),
+        "w_down": P_(ld + (di, d), ln + ("mlp", "embed"), dtype=cfg.dtype),
+    }
+
+
+def _mlstm_qkvg(p, xn, u_conv, u, cfg):
+    s = cfg.ssm
+    h = cfg.n_heads
+    di = s.expand * cfg.d_model
+    dk = di // h
+    lead = u_conv.shape[:-1]
+    uh = u_conv.reshape(lead + (h, dk))
+    q = jnp.einsum("...hk,hkq->...hq", uh, p["wq"])
+    k = jnp.einsum("...hk,hkq->...hq", uh, p["wk"]) / jnp.sqrt(dk).astype(uh.dtype)
+    v = u.reshape(lead + (h, dk))
+    gates = jnp.einsum("...d,dg->...g", xn, p["w_gate"]).astype(jnp.float32)
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)
+    i = jax.nn.sigmoid(i_raw)                       # input gate
+    g = jax.nn.log_sigmoid(f_raw + p["f_bias"].astype(jnp.float32))  # log forget
+    return q, k * i[..., None].astype(k.dtype), v, g
+
+
+def mlstm_fwd(p, x, cache, ctx: Ctx):
+    cfg = ctx.cfg
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    uz = jnp.einsum("...d,dk->...k", xn, p["w_in"])
+    u, z = jnp.split(uz, 2, axis=-1)
+    if ctx.mode == "train":
+        uc, _ = causal_conv1d(u, p["conv_w"])
+    else:
+        conv_state = None if cache is None else cache["conv"]
+        uc, conv_state = causal_conv1d(u, p["conv_w"], conv_state)
+    uc = jax.nn.silu(uc)
+    q, k, v, g = _mlstm_qkvg(p, xn, uc, u, cfg)
+    if ctx.mode == "decode":
+        y, gla = gla_step(q[:, 0], k[:, 0], v[:, 0], g[:, 0],
+                          cache["gla"], normalize=True)
+        y = y[:, None]
+    else:
+        state = None if ctx.mode == "train" else cache["gla"]
+        y, gla = gla_chunked(q, k, v, g, chunk=cfg.ssm.chunk, state=state,
+                             normalize=True)
+    di = cfg.ssm.expand * cfg.d_model
+    out = (y.reshape(y.shape[:2] + (di,)) * jax.nn.silu(z))
+    x = x + jnp.einsum("...k,kd->...d", out, p["w_down"])
+    new_cache = None if ctx.mode == "train" else {"conv": conv_state, "gla": gla}
+    return x, new_cache
+
+
+def mlstm_cache_spec(cfg: ModelConfig, batch: int, ld=()):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    h = cfg.n_heads
+    dk = di // h
+    return {
+        "conv": jax.ShapeDtypeStruct(ld + (batch, s.d_conv - 1, di), cfg.dtype),
+        "gla": GLAState(
+            jax.ShapeDtypeStruct(ld + (batch, h, dk, dk), jnp.float32),
+            jax.ShapeDtypeStruct(ld + (batch, h, dk), jnp.float32)),
+    }
+
+
+# ------------------------------- sLSTM (xLSTM) -------------------------------
+
+def slstm_specs(cfg: ModelConfig, ld=(), ln=()):
+    d = cfg.d_model
+    return {
+        "norm": _norm_spec(cfg, ld, ln),
+        "w_gates": P_(ld + (d, 4 * d), ln + ("embed", "mlp"), dtype=cfg.dtype),
+        "w_out": P_(ld + (d, d), ln + ("embed", "embed_out"), dtype=cfg.dtype),
+    }
+
+
+def slstm_fwd(p, x, cache, ctx: Ctx):
+    cfg = ctx.cfg
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    gates = jnp.einsum("...d,dg->...g", xn, p["w_gates"])
+    zr, ir, fr, orr = jnp.split(gates, 4, axis=-1)
+    z, i, f, o = (jnp.tanh(zr), jax.nn.sigmoid(ir), jax.nn.sigmoid(fr),
+                  jax.nn.sigmoid(orr))
+    if ctx.mode == "decode":
+        y, state = slstm_step(f[:, 0], i[:, 0], z[:, 0], o[:, 0], cache)
+        y = y[:, None]
+    else:
+        state_in = None if ctx.mode == "train" else cache
+        y, state = slstm_scan(f, i, z, o, state_in)
+    x = x + jnp.einsum("...d,de->...e", y.astype(x.dtype), p["w_out"])
+    return x, (None if ctx.mode == "train" else state)
+
+
+def slstm_cache_spec(cfg: ModelConfig, batch: int, ld=()):
+    c = jax.ShapeDtypeStruct(ld + (batch, cfg.d_model), jnp.float32)
+    return (c, c)
+
+
+# ------------------------------- Mamba2 -------------------------------------
+
+def mamba2_specs(cfg: ModelConfig, ld=(), ln=()):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    h = di // s.head_dim
+    return {
+        "norm": _norm_spec(cfg, ld, ln),
+        "w_in": P_(ld + (d, 2 * di), ln + ("embed", "mlp"), dtype=cfg.dtype),
+        "conv_w": P_(ld + (s.d_conv, di), ln + ("conv", "mlp"), init="normal",
+                     scale=0.5, dtype=cfg.dtype),
+        "w_B": P_(ld + (d, s.d_state), ln + ("embed", "state"), dtype=cfg.dtype),
+        "w_C": P_(ld + (d, s.d_state), ln + ("embed", "state"), dtype=cfg.dtype),
+        "w_dt": P_(ld + (d, h), ln + ("embed", "heads"), dtype=cfg.dtype),
+        "dt_bias": P_(ld + (h,), ln + ("heads",), init="zeros", dtype=cfg.dtype),
+        "A_log": P_(ld + (h,), ln + ("heads",), init="zeros", dtype=jnp.float32),
+        "D": P_(ld + (h,), ln + ("heads",), init="ones", dtype=jnp.float32),
+        "w_down": P_(ld + (di, d), ln + ("mlp", "embed"), dtype=cfg.dtype),
+    }
+
+
+def mamba2_fwd(p, x, cache, ctx: Ctx):
+    cfg = ctx.cfg
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    h = di // s.head_dim
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    zu = jnp.einsum("...d,dk->...k", xn, p["w_in"])
+    z, u = jnp.split(zu, 2, axis=-1)
+    if ctx.mode == "train":
+        uc, conv_state = causal_conv1d(u, p["conv_w"])
+    else:
+        uc, conv_state = causal_conv1d(
+            u, p["conv_w"], None if cache is None else cache["conv"])
+    uc = jax.nn.silu(uc)
+    lead = uc.shape[:-1]
+    # SSD parameters: shared B/C across heads (ngroups=1), per-head dt decay
+    Bm = jnp.einsum("...d,ds->...s", xn, p["w_B"])
+    Cm = jnp.einsum("...d,ds->...s", xn, p["w_C"])
+    dt = jax.nn.softplus(
+        jnp.einsum("...d,dh->...h", xn, p["w_dt"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["A_log"])                     # negative per-head rate
+    g = dt * a                                    # log-decay ≤ 0, [.., h]
+    v = uc.reshape(lead + (h, s.head_dim)) * dt[..., None].astype(uc.dtype)
+    k = jnp.broadcast_to(Bm[..., None, :], lead + (h, s.d_state))
+    q = jnp.broadcast_to(Cm[..., None, :], lead + (h, s.d_state))
+    if ctx.mode == "decode":
+        y, gla = gla_step(q[:, 0], k[:, 0], v[:, 0], g[:, 0], cache["gla"])
+        y = y[:, None]
+    else:
+        state = None if ctx.mode == "train" else cache["gla"]
+        y, gla = gla_chunked(q, k, v, g, chunk=s.chunk, state=state)
+    y = y + uc.reshape(lead + (h, s.head_dim)) * p["D"][:, None].astype(uc.dtype)
+    out = y.reshape(lead + (di,)) * jax.nn.silu(z)
+    x = x + jnp.einsum("...k,kd->...d", out, p["w_down"])
+    new_cache = None if ctx.mode == "train" else {"conv": conv_state, "gla": gla}
+    return x, new_cache
+
+
+def mamba2_cache_spec(cfg: ModelConfig, batch: int, ld=()):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    h = di // s.head_dim
+    return {
+        "conv": jax.ShapeDtypeStruct(ld + (batch, s.d_conv - 1, di), cfg.dtype),
+        "gla": GLAState(
+            jax.ShapeDtypeStruct(ld + (batch, h, s.d_state, s.head_dim), jnp.float32),
+            jax.ShapeDtypeStruct(ld + (batch, h, s.d_state), jnp.float32)),
+    }
+
+
+# ------------------------------ Model ---------------------------------------
+
+BODY_REGISTRY: Dict[str, Tuple] = {}
+
+
+def _register_bodies():
+    BODY_REGISTRY["gqa_mlp"] = make_attn_mlp_body("gqa", "mlp")
+    BODY_REGISTRY["gqa_moe"] = make_attn_mlp_body("gqa", "moe")
+    BODY_REGISTRY["mla_moe"] = make_attn_mlp_body("mla", "moe")
+    BODY_REGISTRY["cross"] = make_cross_body()
+    BODY_REGISTRY["mlstm"] = (mlstm_specs, mlstm_fwd)
+    BODY_REGISTRY["slstm"] = (slstm_specs, slstm_fwd)
+    BODY_REGISTRY["mamba2"] = (mamba2_specs, mamba2_fwd)
+
+
+_register_bodies()
+
+
+def _attn_cache_spec(cfg: ModelConfig, kind: str, batch: int, max_seq: int, ld):
+    if kind == "mla":
+        return attn.mla_cache_spec(cfg, batch, max_seq, ld)
+    return attn.gqa_cache_spec(cfg, batch, max_seq, ld)
+
+
+def _scan(body_fn, x, xs, remat: bool):
+    fn = jax.checkpoint(body_fn, prevent_cse=False) if remat else body_fn
+    return jax.lax.scan(fn, x, xs)
+
+
+@dataclasses.dataclass
+class Model:
+    """Family-dispatching model. Public API:
+    specs / init / forward / loss / cache_specs / init_cache / prefill / decode.
+    """
+
+    cfg: ModelConfig
+
+    # ---- structure -----------------------------------------------------
+
+    def _plan(self):
+        """Returns the segment plan for this family (see module docstring)."""
+        cfg = self.cfg
+        fam = cfg.family
+        if fam in ("dense",):
+            return [("layers", "gqa_mlp", cfg.n_layers)]
+        if fam == "audio":
+            return [("layers", "gqa_mlp", cfg.n_layers)]
+        if fam == "moe":
+            kind = "mla_moe" if cfg.mla else "gqa_moe"
+            plan = []
+            nd = cfg.moe.first_dense_layers
+            if nd:
+                dense_kind = "mla_mlp_dense" if cfg.mla else "gqa_mlp_dense"
+                if dense_kind not in BODY_REGISTRY:
+                    BODY_REGISTRY[dense_kind] = make_attn_mlp_body(
+                        "mla" if cfg.mla else "gqa", "mlp", cfg.moe.d_ff_dense)
+                plan.append(("dense_layers", dense_kind, nd))
+            plan.append(("moe_layers", kind, cfg.n_layers - nd))
+            return plan
+        if fam == "ssm":      # xLSTM group plan handled in forward
+            return [("xlstm", "group", cfg.n_layers)]
+        if fam == "hybrid":   # zamba2
+            return [("zamba", "group", cfg.n_layers)]
+        if fam == "vlm":
+            return [("vlm", "group", cfg.n_layers)]
+        raise ValueError(fam)
+
+    # ---- parameter specs -------------------------------------------------
+
+    def specs(self) -> dict:
+        cfg = self.cfg
+        d = cfg.d_model
+        s: dict = {"final_norm": P_((d,), ("embed",), init="ones", dtype=cfg.dtype)}
+        if cfg.frontend == "frames":
+            s["frontend"] = P_((cfg.frontend_dim, d), ("vision", "embed"),
+                               dtype=cfg.dtype)
+            s["embed"] = P_((cfg.vocab, d), ("vocab", "embed"), init="embed",
+                            dtype=cfg.dtype)  # output classes
+        else:
+            s["embed"] = P_((cfg.vocab, d), ("vocab", "embed"), init="embed",
+                            dtype=cfg.dtype)
+        if not cfg.tie_embeddings and not cfg.encoder_only:
+            s["lm_head"] = P_((d, cfg.vocab), ("embed", "vocab"), dtype=cfg.dtype)
+
+        fam = cfg.family
+        if fam == "ssm":
+            g, per = self._xlstm_groups()
+            s["slstm"] = slstm_specs(cfg, (g,), ("layers",))
+            s["mlstm"] = mlstm_specs(cfg, (g, per), ("layers", "layers2"))
+        elif fam == "hybrid":
+            s["mamba"] = mamba2_specs(cfg, (cfg.n_layers,), ("layers",))
+            sa_specs, _ = make_attn_mlp_body("gqa", "mlp", cfg.hybrid.shared_d_ff)
+            s["shared_attn"] = sa_specs(cfg)
+        elif fam == "vlm":
+            g, per = self._vlm_groups()
+            self_specs, _ = BODY_REGISTRY["gqa_mlp"]
+            cross_specs, _ = BODY_REGISTRY["cross"]
+            s["self_layers"] = self_specs(cfg, (g, per), ("layers", "layers2"))
+            s["cross_layers"] = cross_specs(cfg, (g,), ("layers",))
+            s["w_vision"] = P_((cfg.vlm.vision_dim, d), ("vision", "embed"),
+                               dtype=cfg.dtype)
+        else:
+            for name, kind, n in self._plan():
+                spec_fn, _ = BODY_REGISTRY[kind]
+                s[name] = spec_fn(cfg, (n,), ("layers",))
+        return s
+
+    def init(self, rng) -> dict:
+        return init_params(self.specs(), rng)
+
+    def param_struct(self) -> dict:
+        return shape_struct(self.specs())
+
+    def _xlstm_groups(self):
+        per = (self.cfg.ssm.slstm_every or self.cfg.n_layers)
+        assert self.cfg.n_layers % per == 0, (self.cfg.n_layers, per)
+        return self.cfg.n_layers // per, per - 1   # 1 sLSTM + (per-1) mLSTM
+
+    def _vlm_groups(self):
+        per = self.cfg.vlm.cross_attn_every
+        assert self.cfg.n_layers % per == 0
+        return self.cfg.n_layers // per, per
+
+    def _zamba_groups(self):
+        every = self.cfg.hybrid.attn_every
+        n = self.cfg.n_layers
+        full = n // every
+        rem = n - full * every
+        return full, every, rem
+
+    def _hybrid_attn_cfg(self) -> ModelConfig:
+        """Shared-attention sites may carry their own sliding window."""
+        hy = self.cfg.hybrid
+        if hy and hy.attn_window:
+            return dataclasses.replace(self.cfg, sliding_window=hy.attn_window)
+        return self.cfg
+
+    # ---- embedding / head ------------------------------------------------
+
+    def _embed_in(self, params, batch) -> Array:
+        cfg = self.cfg
+        if cfg.frontend == "frames":
+            return jnp.einsum("btf,fd->btd", batch["frames"].astype(cfg.dtype),
+                              params["frontend"])
+        return jnp.take(params["embed"], batch["tokens"], axis=0)
+
+    def _head(self, params, x: Array) -> Array:
+        cfg = self.cfg
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        if cfg.encoder_only:
+            return jnp.einsum("btd,vd->btv", x, params["embed"])
+        w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        return jnp.einsum("btd,dv->btv", x, w)
+
+    def _vision_kv(self, params, batch) -> Optional[Array]:
+        if self.cfg.family != "vlm" or "image_embeds" not in batch:
+            return None
+        return jnp.einsum("bsf,fd->bsd", batch["image_embeds"].astype(self.cfg.dtype),
+                          params["w_vision"])
+
+    # ---- stacks ----------------------------------------------------------
+
+    def _run_stack(self, params, x, caches, ctx: Ctx, remat: bool):
+        """Run all segments; returns (x, new_caches)."""
+        cfg = self.cfg
+        fam = cfg.family
+        new_caches: dict = {}
+        with_cache = ctx.mode != "train"
+
+        if fam == "ssm":
+            g, per = self._xlstm_groups()
+
+            def group(x, inp):
+                ps, pm, cs, cm = inp
+                x, ncs = slstm_fwd(ps, x, cs, ctx)
+                def inner(x, inp2):
+                    pm_l, cm_l = inp2
+                    return mlstm_fwd(pm_l, x, cm_l, ctx)
+                # inner remat too: mLSTM per-chunk f32 states otherwise stay
+                # live across the 7-layer inner scan (29 GB temps at 4k)
+                x, ncm = _scan(inner, x, (pm, cm), remat and not with_cache)
+                return x, (ncs, ncm)
+
+            cs = caches.get("slstm") if with_cache else None
+            cm = caches.get("mlstm") if with_cache else None
+            x, (ncs, ncm) = _scan(group, x,
+                                  (params["slstm"], params["mlstm"], cs, cm),
+                                  remat and not with_cache)
+            if with_cache:
+                new_caches = {"slstm": ncs, "mlstm": ncm}
+            return x, new_caches
+
+        if fam == "hybrid":
+            full, every, rem = self._zamba_groups()
+            sa_p = params["shared_attn"]
+            _, sa_fwd = make_attn_mlp_body("gqa", "mlp", cfg.hybrid.shared_d_ff)
+            ctx_sa = dataclasses.replace(ctx, cfg=self._hybrid_attn_cfg())
+
+            def mamba_inner(x, inp2):
+                pm_l, cm_l = inp2
+                return mamba2_fwd(pm_l, x, cm_l, ctx)
+
+            def group(x, inp):
+                pm, c_attn, cm = inp
+                x, nc_attn = sa_fwd(sa_p, x, c_attn, ctx_sa)
+                x, ncm = _scan(mamba_inner, x, (pm, cm), False)
+                return x, (nc_attn, ncm)
+
+            pm_full = tree_group(tree_slice(params["mamba"], 0, full * every),
+                                 full, every)
+            ca = caches.get("attn") if with_cache else None
+            cm = caches.get("mamba") if with_cache else None
+            ca_full = None if ca is None else tree_slice(ca, 0, full)
+            cm_full = None if cm is None else tree_group(
+                tree_slice(cm, 0, full * every), full, every)
+            x, (nca, ncm) = _scan(group, x, (pm_full, ca_full, cm_full),
+                                  remat and not with_cache)
+            ncm = tree_ungroup(ncm) if with_cache else None
+            if rem:
+                ca_r = None if ca is None else tree_slice(ca, full, full + 1)
+                x, nca_r = sa_fwd(sa_p, x,
+                                  None if ca_r is None else jax.tree.map(
+                                      lambda t: t[0], ca_r), ctx_sa)
+                pm_rem = tree_slice(params["mamba"], full * every, cfg.n_layers)
+                cm_rem = None if cm is None else tree_slice(
+                    cm, full * every, cfg.n_layers)
+                x, ncm_r = _scan(mamba_inner, x, (pm_rem, cm_rem),
+                                 remat and not with_cache)
+                if with_cache:
+                    nca = jax.tree.map(
+                        lambda a, b: jnp.concatenate([a, b[None]], 0), nca, nca_r)
+                    ncm = jax.tree.map(
+                        lambda a, b: jnp.concatenate([a, b], 0), ncm, ncm_r)
+            if with_cache:
+                new_caches = {"attn": nca, "mamba": ncm}
+            return x, new_caches
+
+        if fam == "vlm":
+            _, self_fwd = BODY_REGISTRY["gqa_mlp"]
+            _, cross_fwd = BODY_REGISTRY["cross"]
+
+            def self_inner(x, inp2):
+                p_l, c_l = inp2
+                return self_fwd(p_l, x, c_l, ctx)
+
+            def group(x, inp):
+                ps, pc, cs = inp
+                x, ncs = _scan(self_inner, x, (ps, cs), False)
+                x, _ = cross_fwd(pc, x, None, ctx)
+                return x, ncs
+
+            cs = caches.get("self") if with_cache else None
+            g, per = self._vlm_groups()
+            cs_g = None if cs is None else tree_group(cs, g, per)
+            x, ncs = _scan(group, x,
+                           (params["self_layers"], params["cross_layers"], cs_g),
+                           remat and not with_cache)
+            if with_cache:
+                new_caches = {"self": tree_ungroup(ncs)}
+            return x, new_caches
+
+        # homogeneous segment families (dense / audio / moe)
+        for name, kind, n in self._plan():
+            _, fwd = BODY_REGISTRY[kind]
+
+            def body(x, inp, fwd=fwd):
+                p_l, c_l = inp
+                return fwd(p_l, x, c_l, ctx)
+
+            c = caches.get(name) if with_cache else None
+            x, nc = _scan(body, x, (params[name], c), remat and not with_cache)
+            if with_cache or nc is not None:
+                # train mode: MoE segments emit per-layer aux losses here
+                new_caches[name] = nc
+        return x, new_caches
+
+    # ---- public API --------------------------------------------------------
+
+    def forward(self, params, batch, remat: bool = False) -> Array:
+        """Full-sequence logits (train mode, no cache)."""
+        logits, _ = self.forward_with_aux(params, batch, remat)
+        return logits
+
+    def forward_with_aux(self, params, batch, remat: bool = False):
+        ctx = Ctx(self.cfg, "train", pos=0, causal=not self.cfg.encoder_only,
+                  vision_kv=self._vision_kv(params, batch))
+        x = self._embed_in(params, batch)
+        x, extras = self._run_stack(params, x, {}, ctx, remat)
+        aux = jnp.float32(0.0)
+        for leaf in jax.tree.leaves(extras):
+            aux = aux + jnp.sum(leaf.astype(jnp.float32))
+        return self._head(params, x), aux
+
+    def loss(self, params, batch, remat: bool = False,
+             moe_aux_coeff: float = 0.01):
+        logits, moe_aux = self.forward_with_aux(params, batch, remat=remat)
+        logits = logits.astype(jnp.float32)
+        labels = batch["labels"]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        mask = (labels >= 0).astype(jnp.float32)
+        nll = jnp.sum((lse - ll) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        total = nll + moe_aux_coeff * moe_aux
+        return total, {"loss": nll, "moe_aux": moe_aux, "tokens": jnp.sum(mask)}
+
+    # ---- caches -------------------------------------------------------------
+
+    def cache_specs(self, batch: int, max_seq: int) -> dict:
+        cfg = self.cfg
+        fam = cfg.family
+        if cfg.encoder_only:
+            return {}
+        if fam == "ssm":
+            g, per = self._xlstm_groups()
+            return {"slstm": slstm_cache_spec(cfg, batch, (g,)),
+                    "mlstm": mlstm_cache_spec(cfg, batch, (g, per))}
+        if fam == "hybrid":
+            full, every, rem = self._zamba_groups()
+            sites = full + (1 if rem else 0)
+            return {"attn": attn.gqa_cache_spec(self._hybrid_attn_cfg(),
+                                                batch, max_seq, (sites,)),
+                    "mamba": mamba2_cache_spec(cfg, batch, (cfg.n_layers,))}
+        if fam == "vlm":
+            return {"self": attn.gqa_cache_spec(cfg, batch, max_seq,
+                                                (cfg.n_layers,))}
+        out = {}
+        for name, kind, n in self._plan():
+            akind = "mla" if kind.startswith("mla") else "gqa"
+            out[name] = _attn_cache_spec(cfg, akind, batch, max_seq, (n,))
+        return out
+
+    def init_cache(self, batch: int, max_seq: int) -> dict:
+        def zero(sds):
+            return jnp.zeros(sds.shape, sds.dtype)
+        return jax.tree.map(zero, self.cache_specs(batch, max_seq))
+
+    # ---- serving -------------------------------------------------------------
+
+    def _pos_of(self, cache) -> Array:
+        """Global stream position — min over per-layer pos counters."""
+        leaves = [v for v in jax.tree.leaves(cache)
+                  if hasattr(v, "dtype") and v.dtype == jnp.int32]
+        if not leaves:
+            return jnp.int32(0)
+        return jnp.min(leaves[0])
+
+    def prefill(self, params, batch, cache) -> Tuple[Array, dict]:
+        """Process a prompt, filling caches. Returns (last-token logits, cache).
+        Encoder-only models have no cache: prefill == encode, returning the
+        full per-position logits."""
+        if self.cfg.encoder_only:
+            return self.forward(params, batch), {}
+        ctx = Ctx(self.cfg, "prefill", pos=self._pos_of(cache),
+                  vision_kv=self._vision_kv(params, batch))
+        x = self._embed_in(params, batch)
+        x, new_cache = self._run_stack(params, x, cache, ctx, remat=False)
+        logits = self._head(params, x[:, -1:])
+        return logits[:, 0], new_cache
+
+    def decode(self, params, token: Array, cache,
+               vision_kv: Any = None) -> Tuple[Array, dict]:
+        """One decode step. token [B, 1] int32. Returns (logits [B,V], cache)."""
+        ctx = Ctx(self.cfg, "decode", pos=self._pos_of(cache),
+                  vision_kv=vision_kv)
+        x = jnp.take(params["embed"], token, axis=0)
+        x, new_cache = self._run_stack(params, x, cache, ctx, remat=False)
+        return self._head(params, x)[:, 0], new_cache
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

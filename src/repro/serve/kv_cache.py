@@ -1,0 +1,100 @@
+"""Cache planning utilities for serving.
+
+The cache *containers* live next to their kernels (models/layers.py,
+models/attention.py); this module is the serving-side planner: per-arch
+cache byte accounting, spec/zeros construction and sharding specs.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import Model
+
+_ITEM = {jnp.int8: 1, jnp.bfloat16: 2, jnp.float32: 4, jnp.int32: 4}
+
+
+def cache_bytes(cfg: ModelConfig, batch: int, max_seq: int) -> int:
+    """Total cache bytes for one request batch (all layers)."""
+    specs = Model(cfg).cache_specs(batch, max_seq)
+    total = 0
+    for leaf in jax.tree.leaves(specs):
+        total += int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+    return total
+
+
+def cache_shardings(mesh: Mesh, cfg: ModelConfig, batch: int, max_seq: int):
+    """Shard caches: batch over data(+pod); widest head/feature dim over model.
+
+    Heuristic per leaf: dim0 is layers (replicated); the batch dim takes the
+    data axes if divisible; the first remaining dim divisible by the model
+    axis takes it (kv-heads usually; falls back to head_dim, then latent)."""
+    specs = Model(cfg).cache_specs(batch, max_seq)
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dsize = int(np.prod([mesh.shape[a] for a in data_axes])) if data_axes else 1
+    msize = mesh.shape["model"] if "model" in mesh.axis_names else 1
+
+    def one(path, leaf):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path).lower()
+        nd = len(leaf.shape)
+        entries = [None] * nd
+        # find the batch dim: first dim equal to `batch` after the layer dims
+        bidx = None
+        for i, s in enumerate(leaf.shape):
+            if s == batch and i >= 1:
+                bidx = i
+                break
+        if bidx is not None and data_axes and batch % dsize == 0:
+            entries[bidx] = data_axes
+        if msize > 1 and bidx is not None:
+            if "gla" in key:
+                # recurrent state [.., B, H, Dk, Dv]: per-head layouts are
+                # comm-free when H divides; else shard Dv (the output dim of
+                # y = q·S — sharding Dk forces per-layer psum/reshard, probed
+                # on xlstm decode). Order: H, Dv, Dk.
+                order = [bidx + 1, nd - 1] + list(range(nd - 2, bidx + 1, -1))
+            elif "c_kv" in key or "k_rope" in key:
+                # MLA latent cache: sharding the latent dim conflicts with
+                # head-sharded absorbed queries — XLA re-gathers the whole
+                # cache per layer (probed: 537 MB/layer on deepseek-v2
+                # decode); replicating it busts HBM (17 GB temps). The
+                # absorbed-decode path is plain einsums over S (no chunk
+                # scan), so SEQUENCE-sharded cache works: tree-attention
+                # decode with only [B,H]-sized softmax-stat reductions.
+                order = [bidx + 1]
+            else:
+                # attention k/v [.., B, S, KH, HD] & conv [.., B, K-1, C]:
+                # first divisible dim after the sequence slot (never S — the
+                # flash scan chunks along it).
+                order = list(range(bidx + 2, nd))
+            for i in order:
+                if entries[i] is None and leaf.shape[i] % msize == 0 \
+                        and leaf.shape[i] >= msize:
+                    entries[i] = "model"
+                    break
+        while entries and entries[-1] is None:
+            entries.pop()
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree_util.tree_map_with_path(one, specs)
+
+
+def plan(cfg: ModelConfig, batch: int, max_seq: int, chips: int,
+         hbm_per_chip: float = 16e9) -> Dict:
+    """Serving memory plan: does (params + cache) fit the pod?"""
+    from repro.models.zoo import count_params
+    p_bytes = count_params(cfg) * 2       # bf16
+    c_bytes = cache_bytes(cfg, batch, max_seq)
+    per_chip = (p_bytes + c_bytes) / chips
+    return {
+        "param_bytes": p_bytes,
+        "cache_bytes": c_bytes,
+        "per_chip_bytes": per_chip,
+        "fits": per_chip < 0.9 * hbm_per_chip,
+    }

@@ -1,0 +1,94 @@
+"""AdamW with f32 master weights, global-norm clipping and a cosine
+schedule — self-contained (no optax), pytree-native, pjit-friendly.
+
+Opt-state layout (OptState) is a pytree of per-param leaves so the ZeRO-1
+sharding rules in distributed/sharding.py apply leaf-wise.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class OptState(NamedTuple):
+    step: Array      # scalar int32
+    master: Any      # f32 master copy of params
+    mu: Any          # first moment (f32)
+    nu: Any          # second moment (f32)
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def adamw_init(params) -> OptState:
+    # copy=True: for f32 params, astype would alias the param buffer into
+    # the master copy — a donating train step then donates it twice
+    f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
+    z32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        master=jax.tree.map(f32, params),
+        mu=jax.tree.map(z32, params),
+        nu=jax.tree.map(z32, params),
+    )
+
+
+def cosine_lr(step: Array, cfg: OptConfig) -> Array:
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((s - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(s < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), tree), norm
+
+
+def adamw_apply(params, grads, state: OptState, cfg: OptConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    lr = cosine_lr(step, cfg)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(m, g, mu, nu):
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g)
+        mhat = mu / b1c
+        nhat = nu / b2c
+        m_new = m - lr * (mhat / (jnp.sqrt(nhat) + cfg.eps) + cfg.weight_decay * m)
+        return m_new, mu, nu
+
+    out = jax.tree.map(upd, state.master, grads, state.mu, state.nu)
+    outer = jax.tree.structure(state.master)
+    inner = jax.tree.structure((0, 0, 0))
+    master, mu, nu = jax.tree.transpose(outer, inner, out)
+    new_params = jax.tree.map(lambda m, p: m.astype(p.dtype), master, params)
+    return new_params, OptState(step, master, mu, nu), {
+        "lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,67 @@
+"""Distributed engine tests. Multi-device CPU runs need
+XLA_FLAGS=--xla_force_host_platform_device_count set *before* jax import,
+so these run in subprocesses (the main pytest process keeps 1 device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+WORKER = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import *
+from repro.core.distributed import make_distributed_matvec
+
+rng = np.random.default_rng(1)
+n = 128
+dense_np = (rng.random((n, n)) < 0.08).astype(np.float32) * rng.integers(1, 9, (n, n))
+rows, cols = np.nonzero(dense_np)
+vals = dense_np[rows, cols].astype(np.float32)
+mesh = jax.make_mesh((2, 4), ("dr", "dc"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+checked = 0
+for sr in (PLUS_TIMES, MIN_PLUS, BOOL_OR_AND):
+    if sr.name == "min_plus":
+        dense = np.where(dense_np != 0, dense_np, np.inf).astype(np.float32)
+        x = np.where(rng.random(n) < 0.3, rng.random(n), np.inf).astype(np.float32)
+        v = vals; fill = np.inf
+    elif sr.name == "bool_or_and":
+        dense = (dense_np != 0).astype(np.int32)
+        x = (rng.random(n) < 0.3).astype(np.int32)
+        v = np.ones_like(vals, dtype=np.int32); fill = 0
+    else:
+        dense = dense_np
+        x = np.where(rng.random(n) < 0.3, rng.random(n), 0).astype(np.float32)
+        v = vals; fill = 0.0
+    oracle = np.asarray(sr.matvec(jnp.asarray(dense, sr.dtype), jnp.asarray(x, sr.dtype)))
+
+    cases = [("row", (8, 1), "csr", "spmv"), ("row", (8, 1), "coo", "spmv"),
+             ("col", (1, 8), "csc", "spmspv"), ("2d", (2, 4), "csc", "spmspv"),
+             ("2d", (2, 4), "coo", "spmv"), ("row", (8, 1), "bsr", "spmv"),
+             ("2d", (2, 4), "bsr", "spmspv")]
+    for strategy, grid, fmt, kern in cases:
+        pm = partition(rows, cols, v, (n, n), grid, fmt, sr, block=(16, 16))
+        n_pad = pm.shape[1]
+        xp = np.full(n_pad, fill, dtype=x.dtype); xp[:n] = x
+        xs = jnp.asarray(xp.reshape(8, -1), sr.dtype)
+        fn = make_distributed_matvec(mesh, pm, sr, strategy, kernel=kern)
+        y = np.asarray(jax.jit(fn)(pm.parts, xs)).reshape(-1)[:n]
+        np.testing.assert_allclose(y, oracle, rtol=1e-5,
+                                   err_msg=f"{sr.name}/{strategy}/{fmt}/{kern}")
+        checked += 1
+print(f"DISTRIBUTED_OK {checked}")
+"""
+
+
+@pytest.mark.slow
+def test_distributed_strategies_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = REPO_SRC + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run([sys.executable, "-c", WORKER], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
+    assert "DISTRIBUTED_OK 21" in res.stdout, res.stdout

@@ -1,0 +1,104 @@
+"""Numerics properties of the sequence mixers and quantized caches:
+chunked/parallel forms must match their single-step recurrences, and int8
+quantization error must respect its analytic bound (hypothesis-driven)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import quantize_kv
+from repro.models.ssm import (
+    GLAState, gla_chunked, gla_step, slstm_scan, slstm_step,
+)
+
+
+@given(st.integers(0, 10_000), st.integers(1, 3), st.sampled_from([4, 7, 16]),
+       st.sampled_from([1, 2]))
+@settings(max_examples=12, deadline=None)
+def test_property_gla_chunked_matches_stepwise(seed, b, t, h):
+    """gla_chunked(T tokens) == T applications of gla_step (both modes)."""
+    rng = np.random.default_rng(seed)
+    dk, dv = 4, 6
+    q = jnp.asarray(rng.standard_normal((b, t, h, dk)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, t, h, dk)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, t, h, dv)), jnp.float32)
+    g = jnp.asarray(-np.abs(rng.standard_normal((b, t, h))), jnp.float32)
+    for normalize in (False, True):
+        y_par, st_par = gla_chunked(q, k, v, g, chunk=3, normalize=normalize)
+        state = GLAState(jnp.zeros((b, h, dk, dv)), jnp.zeros((b, h, dk)))
+        ys = []
+        for i in range(t):
+            y, state = gla_step(q[:, i], k[:, i], v[:, i], g[:, i], state,
+                                normalize=normalize)
+            ys.append(y)
+        y_seq = jnp.stack(ys, axis=1)
+        np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                                   rtol=2e-4, atol=2e-5)
+        np.testing.assert_allclose(np.asarray(st_par.s), np.asarray(state.s),
+                                   rtol=2e-4, atol=2e-5)
+
+
+@given(st.integers(0, 10_000), st.integers(2, 9))
+@settings(max_examples=12, deadline=None)
+def test_property_slstm_scan_matches_stepwise(seed, t):
+    rng = np.random.default_rng(seed)
+    b, c = 2, 5
+    f = jnp.asarray(rng.uniform(0.1, 0.95, (b, t, c)), jnp.float32)
+    i = jnp.asarray(rng.uniform(0.1, 0.95, (b, t, c)), jnp.float32)
+    z = jnp.asarray(rng.standard_normal((b, t, c)), jnp.float32)
+    o = jnp.asarray(rng.uniform(0.1, 1.0, (b, t, c)), jnp.float32)
+    y_par, (cs, ns) = slstm_scan(f, i, z, o)
+    state = (jnp.zeros((b, c)), jnp.zeros((b, c)))
+    ys = []
+    for j in range(t):
+        y, state = slstm_step(f[:, j], i[:, j], z[:, j], o[:, j], state)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(y_par),
+                               np.asarray(jnp.stack(ys, 1)),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(cs), np.asarray(state[0]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_slstm_scan_with_carried_state():
+    """Splitting a sequence across two scan calls == one scan."""
+    rng = np.random.default_rng(3)
+    b, t, c = 2, 8, 4
+    f = jnp.asarray(rng.uniform(0.2, 0.9, (b, t, c)), jnp.float32)
+    i = jnp.asarray(rng.uniform(0.2, 0.9, (b, t, c)), jnp.float32)
+    z = jnp.asarray(rng.standard_normal((b, t, c)), jnp.float32)
+    o = jnp.asarray(rng.uniform(0.2, 1.0, (b, t, c)), jnp.float32)
+    y_full, _ = slstm_scan(f, i, z, o)
+    y1, s1 = slstm_scan(f[:, :3], i[:, :3], z[:, :3], o[:, :3])
+    y2, _ = slstm_scan(f[:, 3:], i[:, 3:], z[:, 3:], o[:, 3:], state=s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(0, 10_000), st.floats(-4, 4))
+@settings(max_examples=20, deadline=None)
+def test_property_kv_quant_error_bound(seed, log_scale):
+    """Per-token int8: |x - deq| <= scale/2 where scale = token-max/127."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((2, 3, 4, 8)) * 10.0 ** log_scale,
+                    jnp.float32)
+    q, s = quantize_kv(x)
+    assert q.dtype == jnp.int8 and s.shape == (2, 3)
+    deq = q.astype(jnp.float32) * np.asarray(s)[..., None, None]
+    err = np.abs(np.asarray(deq) - np.asarray(x))
+    bound = np.asarray(s)[..., None, None] * 0.5 + 1e-12
+    assert (err <= bound + 1e-6 * np.abs(np.asarray(x))).all()
+
+
+def test_gla_chunk_size_invariance():
+    """The chunk size is a performance knob, never a numerics knob."""
+    rng = np.random.default_rng(7)
+    b, t, h, dk, dv = 1, 12, 2, 4, 4
+    q = jnp.asarray(rng.standard_normal((b, t, h, dk)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, t, h, dk)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, t, h, dv)), jnp.float32)
+    g = jnp.asarray(-np.abs(rng.standard_normal((b, t, h))) * 0.1, jnp.float32)
+    outs = [np.asarray(gla_chunked(q, k, v, g, chunk=cs)[0])
+            for cs in (1, 3, 4, 12)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=2e-4, atol=2e-5)
