@@ -5,7 +5,6 @@ adaptive switching (§4.2).
 from benchmarks import common  # noqa: F401
 
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit, timeit
 from repro.core.semiring import BOOL_OR_AND, MIN_PLUS

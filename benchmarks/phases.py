@@ -16,7 +16,7 @@ from repro.core.distributed import (
     _local_matvec, _op_reduce_scatter, make_distributed_matvec,
     vec_to_2d_layout,
 )
-from repro.core.partition import PartitionedMatrix, partition, shard_vector
+from repro.core.partition import PartitionedMatrix, partition
 from repro.core.semiring import Semiring
 
 

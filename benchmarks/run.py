@@ -14,6 +14,7 @@ MODULES = [
     "fig7_adaptive_e2e",
     "fig8_scaling",
     "table4_apps",
+    "multi_query",
     "sensitivity_switch",
     "roofline",
 ]

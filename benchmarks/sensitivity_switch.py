@@ -6,7 +6,6 @@ from benchmarks import common  # noqa: F401
 import dataclasses
 
 import jax
-import numpy as np
 
 from benchmarks.common import emit, timeit
 from repro.core.semiring import BOOL_OR_AND

@@ -21,7 +21,6 @@ def main():
 
     import jax
     import jax.numpy as jnp
-    import numpy as np
     from repro.distributed.fault_tolerance import FTConfig, TrainDriver
     from repro.models.transformer import build_model
     from repro.models.zoo import count_params, reduced_config

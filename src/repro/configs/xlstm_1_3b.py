@@ -2,7 +2,6 @@
 
 48 blocks d_model=2048 4H vocab=50304, d_ff=0 (mixer blocks carry their own
 up/down projections). xLSTM[7:1]: one sLSTM per 8 blocks (slstm_every=8)."""
-import jax.numpy as jnp
 
 from repro.models.config import ModelConfig, SSMConfig
 

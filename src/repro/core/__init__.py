@@ -7,11 +7,15 @@ from repro.core.formats import (  # noqa: F401
     BSRMatrix, COOMatrix, CSCMatrix, CSRMatrix, PaddedBSR,
     build_bsr, build_bsr_padded, build_coo, build_csc, build_csr,
 )
-from repro.core.spmv import spmv, spmv_bsr_ref, spmv_coo, spmv_csr  # noqa: F401
+from repro.core.spmv import (  # noqa: F401
+    spmv, spmv_batch, spmv_bsr_ref, spmv_coo, spmv_csr,
+)
 from repro.core.spmspv import (  # noqa: F401
-    Frontier, frontier_from_dense, spmspv, spmspv_csc_gather, spmspv_csr_masked,
+    Frontier, frontier_from_dense, spmspv, spmspv_batch, spmspv_csc_gather,
+    spmspv_csr_masked,
 )
 from repro.core.adaptive import (  # noqa: F401
-    DecisionStump, GraphFeatures, adaptive_matvec, fit_decision_stump,
+    DecisionStump, GraphFeatures, adaptive_matvec, adaptive_matvec_batch,
+    fit_decision_stump, select_kernel_batch,
 )
 from repro.core.partition import PartitionedMatrix, partition, shard_vector  # noqa: F401

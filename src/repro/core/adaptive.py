@@ -109,3 +109,51 @@ def adaptive_matvec(
     internally (Frontier is built inside, keeping the cond signature simple).
     """
     return jax.lax.cond(density > threshold, spmv_fn, spmspv_fn, x_dense)
+
+
+def select_kernel_batch(densities: Array, threshold: float) -> Array:
+    """Per-query kernel codes over a batch: [B] int32, 0 = SpMSpV, 1 = SpMV."""
+    return (densities > threshold).astype(jnp.int32)
+
+
+def adaptive_matvec_batch(
+    spmspv_batch_fn: Callable[[Array], Array],
+    spmv_batch_fn: Callable[[Array], Array],
+    x_block: Array,
+    densities: Array,
+    threshold: float,
+    zero=0,
+) -> Array:
+    """One adaptive iteration over a [B, n] frontier block with *per-query*
+    kernel choice. Queries launched together densify roughly in lockstep,
+    so the common case is *homogeneous*: every row on the same side of the
+    threshold, and a scalar lax.switch runs exactly one kernel — the paper's
+    switch at batch granularity. Only a genuinely mixed iteration pays for
+    both kernels plus a per-row select (lax.cond would degenerate to that
+    select under vmap anyway); each row's value is exactly what the
+    unbatched lax.cond would produce in every case.
+
+    ``zero`` is the semiring zero: the mixed branch blanks the rows that
+    chose SpMV before invoking the sparse kernel, so a batched capacity
+    ladder (keyed on the max live row) sizes itself from the sub-threshold
+    rows only — one dense row must not drag the whole block onto the
+    full-capacity rung. Blanked rows' sparse outputs are discarded by the
+    select, and each kept row's computation is unchanged (vmap is row-wise).
+    """
+    above = densities > threshold
+
+    def all_sparse(xs):
+        return spmspv_batch_fn(xs)
+
+    def all_dense(xs):
+        return spmv_batch_fn(xs)
+
+    def mixed(xs):
+        xs_sparse = jnp.where(above[:, None], jnp.asarray(zero, xs.dtype), xs)
+        return jnp.where(above[:, None], spmv_batch_fn(xs),
+                         spmspv_batch_fn(xs_sparse))
+
+    n_above = jnp.sum(above.astype(jnp.int32))
+    b = densities.shape[0]
+    sel = jnp.where(n_above == 0, 0, jnp.where(n_above == b, 1, 2))
+    return jax.lax.switch(sel, [all_sparse, all_dense, mixed], x_block)

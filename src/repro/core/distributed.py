@@ -177,6 +177,103 @@ def make_distributed_matvec(
                      check_rep=False)
 
 
+def _op_reduce_scatter_batched(x: Array, sr: Semiring, axis_name,
+                               axis_size: int) -> Array:
+    """Batched ⊕-reduce-scatter: x is [B, M_local_out * axis_size]; the
+    device axis moves to dim 1 so the batch rows stay contiguous."""
+    if sr.collective == "psum":
+        return jax.lax.psum_scatter(x, axis_name, scatter_dimension=1,
+                                    tiled=True)
+    b = x.shape[0]
+    m = x.shape[1] // axis_size
+    xs = x.reshape(b, axis_size, m)
+    exchanged = jax.lax.all_to_all(xs, axis_name, split_axis=1, concat_axis=1)
+    return sr.add_reduce(exchanged, axis=1)
+
+
+def make_distributed_batched_matvec(
+    mesh: Mesh,
+    pm: PartitionedMatrix,
+    sr: Semiring,
+    strategy: str,
+    kernel: str = "spmv",
+    impl: str = "auto",
+    axis_names: Sequence[str] = ("dr", "dc"),
+) -> Callable[[object, Array], Array]:
+    """[B, n]-block counterpart of make_distributed_matvec: the adjacency
+    shards exactly as in the unbatched path (paper Fig. 3 strategies) while
+    every Load/Retrieve/Merge collective carries the whole query block —
+    B traversals amortize one partitioning's collective schedule.
+
+    x/y layout: [D, B, n_per] sharded over the flat device axes (the
+    canonical flat layout with a batch dim inserted after the device axis).
+    The compressed-frontier Load (``f_local``) stays single-query only:
+    per-row frontiers have different live counts, so a shared capacity
+    would re-introduce the truncation ambiguity the ladder avoids.
+    """
+    ar, ac = axis_names
+    flat = (ar, ac)
+    r_parts, c_parts = pm.grid
+    d = pm.n_devices
+
+    a_specs = jax.tree.map(lambda _: P(flat), pm.parts)
+
+    def strip_lead(a_tree):
+        return jax.tree.map(lambda x: x[0], a_tree)
+
+    def local_batch_matvec(a_local, xs_full: Array) -> Array:
+        return jax.vmap(
+            lambda x: _local_matvec(a_local, x, sr, kernel, impl))(xs_full)
+
+    if strategy == "row":
+        def body(parts, x):
+            a_local = strip_lead(parts)
+            x_full = jax.lax.all_gather(x[0], flat, tiled=True, axis=1)
+            y = local_batch_matvec(a_local, x_full)     # [B, m_local]
+            return y[None]
+
+        return shard_map(body, mesh=mesh, in_specs=(a_specs, P(flat)),
+                         out_specs=P(flat), check_rep=False)
+
+    if strategy == "col":
+        def body(parts, x):
+            a_local = strip_lead(parts)
+            y_partial = local_batch_matvec(a_local, x[0])   # [B, m_full]
+            y = _op_reduce_scatter_batched(y_partial, sr, flat, d)
+            return y[None]
+
+        return shard_map(body, mesh=mesh, in_specs=(a_specs, P(flat)),
+                         out_specs=P(flat), check_rep=False)
+
+    if strategy == "2d":
+        assert (r_parts, c_parts) == (mesh.shape[ar], mesh.shape[ac]), (
+            f"2d grid {pm.grid} != mesh {(mesh.shape[ar], mesh.shape[ac])}")
+
+        def body(parts, x):
+            a_local = strip_lead(strip_lead(parts))
+            x_cols = jax.lax.all_gather(x[0, 0], ar, tiled=True, axis=1)
+            y_partial = local_batch_matvec(a_local, x_cols)
+            y = _op_reduce_scatter_batched(y_partial, sr, ac, c_parts)
+            return y[None, None]
+
+        fn_body = shard_map(
+            body, mesh=mesh,
+            in_specs=(jax.tree.map(lambda _: P((ar,), (ac,)), pm.parts),
+                      P(ar, ac)),
+            out_specs=P(ar, ac), check_rep=False)
+
+        def fn2d(parts, x):
+            reshaped = jax.tree.map(
+                lambda v: v.reshape((r_parts, c_parts) + v.shape[1:]), parts)
+            x2 = x.reshape(c_parts, r_parts, *x.shape[1:]).transpose(1, 0, 2, 3)
+            y2 = fn_body(reshaped, x2)
+            return y2.reshape(d, x.shape[1], -1)
+
+        return fn2d
+
+    raise ValueError(strategy)
+
+
 def vec_to_2d_layout(x: Array, grid) -> Array:
     """Canonical [D, n_per] (chunk g at row g) → 2d input layout
     x2[r, c] = chunk (c*R + r). Under pjit this is a collective permute —

@@ -123,6 +123,67 @@ def spmspv_coo_masked(a: COOMatrix, x: Frontier, sr: Semiring) -> Array:
     return sr.segment_reduce(prod, jnp.where(ok, a.rows, m), m)
 
 
+def spmspv_batch(a, xs: Array, sr: Semiring, f_max: int | None = None,
+                 impl: str = "auto") -> Array:
+    """Batched SpMSpV over a [B, n] block of *dense* vectors: each row is
+    compressed to a capacity-``f_max`` frontier and multiplied independently.
+    Rows compress to different live counts but identical static shapes, so
+    one vmapped kernel serves the whole block; a row's result is bit-equal
+    to the unbatched spmspv at the same capacity."""
+
+    def one(x: Array) -> Array:
+        f = frontier_from_dense(x, sr, f_max=f_max)
+        return spmspv(a, f, sr, impl=impl)
+
+    return jax.vmap(one)(xs)
+
+
+def spmspv_batch_union(a: CSCMatrix, xs: Array, sr: Semiring,
+                       f_max: int | None = None) -> Array:
+    """Batched CSC SpMSpV over the **union frontier** — the fast path for
+    query blocks sharing one graph. All B rows touch the same adjacency, so
+    the active-column structure is compressed once across the block:
+
+    * union mask ∨_b (xs[b] != 0) -> one capacity-``f_max`` column list;
+    * one [F, L] gather of the columns' (rows, vals) slices, shared by
+      every query (the vmapped per-row form gathers it B times);
+    * per-row products against xs[:, cols] -> [B, F, L];
+    * ONE ⊕-segment-reduce with the [F, L] ids shared across the B lanes
+      (data transposed to [F*L, B]) instead of B scattered reductions.
+
+    A row contributes only where its own entry is nonzero, so row b's
+    result equals spmspv(a, frontier(xs[b])) whenever ``f_max`` covers the
+    union (⊕-reduction order may differ, which matters only below float
+    tolerance for ⟨+,×⟩). Work is O(f_union · max_col_nnz · B) products but
+    the expensive gather/scatter structure is batch-invariant."""
+    m, n = a.shape
+    b = xs.shape[0]
+    f_max = f_max or n
+    nz_any = jnp.any(xs != sr.zero, axis=0)                     # [n]
+    count = jnp.sum(nz_any.astype(jnp.int32))
+    order = jnp.argsort(~nz_any, stable=True)
+    idx = jnp.where(jnp.arange(n) < count, order, n)[:f_max].astype(jnp.int32)
+    ok_col = idx < n
+    safe_j = jnp.where(ok_col, idx, 0)
+    start = a.col_ptr[safe_j]                                   # [F]
+    length = a.col_ptr[safe_j + 1] - start
+    offs = jnp.arange(a.max_col_nnz, dtype=jnp.int32)           # [L]
+    gidx = start[:, None] + offs[None, :]                       # [F, L]
+    in_col = offs[None, :] < length[:, None]
+    gidx = jnp.where(in_col, gidx, a.nnz_max - 1)
+    rows = a.rows[gidx]                                         # [F, L]
+    vals = a.vals[gidx].astype(sr.dtype)
+    xv = jnp.where(ok_col[None, :], xs[:, safe_j].astype(sr.dtype),
+                   sr.zero)                                     # [B, F]
+    prod = sr.mul(vals[None], xv[:, :, None])                   # [B, F, L]
+    valid = in_col[None] & (xv[:, :, None] != sr.zero)
+    prod = jnp.where(valid, prod, sr.zero)
+    seg = jnp.where(in_col, rows, m)                            # [F, L] shared
+    flat = prod.reshape(b, -1).T                                # [F*L, B]
+    y = sr.segment_reduce(flat, seg.reshape(-1), m)             # [m, B]
+    return y.T
+
+
 def spmspv(a, x: Frontier, sr: Semiring, impl: str = "auto") -> Array:
     if isinstance(a, COOMatrix):
         return spmspv_coo_masked(a, x, sr)

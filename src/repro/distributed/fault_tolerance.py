@@ -25,7 +25,6 @@ import time
 from typing import Callable, Dict, List, Optional
 
 import jax
-import numpy as np
 
 from repro.train import checkpoint as ckpt
 

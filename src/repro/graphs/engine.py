@@ -17,10 +17,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import formats
-from repro.core.adaptive import DecisionStump
+from repro.core.adaptive import DecisionStump, adaptive_matvec_batch
 from repro.core.semiring import Semiring
-from repro.core.spmspv import frontier_from_dense, spmspv
-from repro.core.spmv import spmv
+from repro.core.spmspv import frontier_from_dense, spmspv, spmspv_batch_union
+from repro.core.spmv import spmv, spmv_batch
 from repro.graphs.datasets import Graph
 
 Array = jax.Array
@@ -30,7 +30,11 @@ MatvecFn = Callable[[Array], Array]
 @dataclasses.dataclass
 class GraphEngine:
     """Per-(graph, semiring) compiled state: the transposed adjacency in the
-    formats the two kernels want, plus the adaptive switch threshold."""
+    formats the two kernels want, plus the adaptive switch threshold.
+
+    ``spmv_batch_fn``/``spmspv_batch_fn`` are the [B, n]-block counterparts
+    of the single-vector closures (vmapped over the same adjacency), the
+    substrate of the multi-source traversals in graphs/multi.py."""
 
     spmv_fn: MatvecFn
     spmspv_fn: MatvecFn
@@ -39,6 +43,8 @@ class GraphEngine:
     threshold: float
     graph_class: str
     sr: Semiring
+    spmv_batch_fn: MatvecFn | None = None
+    spmspv_batch_fn: MatvecFn | None = None
 
     def adaptive_fn(self, x: Array, density: Array) -> Array:
         """One adaptive matvec: SpMV above the density threshold else SpMSpV."""
@@ -51,6 +57,25 @@ class GraphEngine:
             return lambda x, _d: self.spmspv_fn(x)
         if policy == "adaptive":
             return self.adaptive_fn
+        raise ValueError(policy)
+
+    def adaptive_batch_fn(self, xs: Array, densities: Array) -> Array:
+        """Per-query adaptive matvec over a [B, n] block (see
+        core.adaptive.adaptive_matvec_batch for the select semantics)."""
+        return adaptive_matvec_batch(self.spmspv_batch_fn, self.spmv_batch_fn,
+                                     xs, densities, self.threshold,
+                                     zero=self.sr.zero)
+
+    def batch_step_fn(self, policy: str) -> Callable[[Array, Array], Array]:
+        """[B, n]-block counterpart of step_fn: fn(xs, densities) -> ys."""
+        if self.spmv_batch_fn is None or self.spmspv_batch_fn is None:
+            raise ValueError("engine was built without batched closures")
+        if policy == "spmv":
+            return lambda xs, _d: self.spmv_batch_fn(xs)
+        if policy == "spmspv":
+            return lambda xs, _d: self.spmspv_batch_fn(xs)
+        if policy == "adaptive":
+            return self.adaptive_batch_fn
         raise ValueError(policy)
 
 
@@ -129,6 +154,55 @@ def build_engine(g: Graph, sr: Semiring, stump: DecisionStump | None = None,
         return jax.lax.switch(sel, branches, x)
 
     feats = g.features()
+    # Batched closures. The SpMSpV bucket ladder survives batching as a
+    # *scalar* switch: the selected rung's capacity covers every row, so
+    # each row's result is the same (lossless) vector the unbatched ladder
+    # produces, but only ONE rung executes per iteration — a per-row switch
+    # index under vmap would run all of them. CSC engines take the
+    # union-frontier path (one shared column gather + one B-lane
+    # ⊕-segment-reduce, see core.spmspv.spmspv_batch_union) keyed on the
+    # union nonzero count; other formats vmap the per-row closure keyed on
+    # the max per-row count.
+    if isinstance(a_mv, (formats.COOMatrix, formats.CSRMatrix)):
+        def spmv_batch_fn(xs: Array) -> Array:
+            xp = _pad_cols(xs, a_mv.shape[1], sr)
+            y = spmv_batch(a_mv, xp, sr)[:, : shape[0]]
+            return _pad_cols(y, n_pad, sr)
+    else:
+        spmv_batch_fn = jax.vmap(spmv_fn)
+    use_union = isinstance(a_msv, formats.CSCMatrix)
+
+    def msv_batch_at(fmax):
+        if not use_union:
+            return jax.vmap(msv_at(fmax))
+        # Work model (the paper's own selection logic, applied per rung): a
+        # capacity-fmax CSC gather touches fmax * max_col_nnz slots; once
+        # that exceeds the matrix's nnz, the dense-input SpMV computes the
+        # *identical* vector for strictly less work. Union frontiers densify
+        # B times faster than single ones, so batched ladders cross over on
+        # rungs single-source traversals still run sparse.
+        if (fmax * a_msv.max_col_nnz >= g.nnz
+                and isinstance(a_mv, (formats.COOMatrix, formats.CSRMatrix))):
+            return spmv_batch_fn
+
+        def fn(xs: Array) -> Array:
+            y = spmspv_batch_union(a_msv, xs[:, : shape[1]], sr, f_max=fmax)
+            return _pad_cols(y[:, : shape[0]], n_pad, sr)
+        return fn
+
+    batch_branches = [msv_batch_at(b) for b in buckets]
+
+    def spmspv_batch_fn(xs: Array) -> Array:
+        if len(batch_branches) == 1:
+            return batch_branches[0](xs)
+        live = xs[:, : shape[1]] != sr.zero
+        if use_union:
+            nnz = jnp.sum(jnp.any(live, axis=0).astype(jnp.int32))
+        else:
+            nnz = jnp.max(jnp.sum(live.astype(jnp.int32), axis=1))
+        sel = jnp.searchsorted(jnp.asarray(buckets, jnp.int32), nnz)
+        sel = jnp.minimum(sel, len(batch_branches) - 1)
+        return jax.lax.switch(sel, batch_branches, xs)
     return GraphEngine(
         spmv_fn=spmv_fn,
         spmspv_fn=spmspv_fn,
@@ -137,6 +211,8 @@ def build_engine(g: Graph, sr: Semiring, stump: DecisionStump | None = None,
         threshold=stump.switch_threshold(feats),
         graph_class=stump.classify(feats),
         sr=sr,
+        spmv_batch_fn=spmv_batch_fn,
+        spmspv_batch_fn=spmspv_batch_fn,
     )
 
 
@@ -184,6 +260,22 @@ def _pad(x: Array, n: int, sr: Semiring) -> Array:
     return jnp.pad(x, (0, n - x.shape[0]), constant_values=sr.zero)
 
 
+def _pad_cols(xs: Array, n: int, sr: Semiring) -> Array:
+    """[B, m] -> [B, n]: slice or ⊕-zero-pad the trailing axis."""
+    if xs.shape[1] == n:
+        return xs
+    if xs.shape[1] > n:
+        return xs[:, :n]
+    return jnp.pad(xs, ((0, 0), (0, n - xs.shape[1])),
+                   constant_values=sr.zero)
+
+
 def density_of(x: Array, sr: Semiring, n_true: int) -> Array:
     nz = jnp.sum((x[:n_true] != sr.zero).astype(jnp.int32))
+    return nz.astype(jnp.float32) / float(n_true)
+
+
+def density_of_batch(xs: Array, sr: Semiring, n_true: int) -> Array:
+    """Per-row frontier densities of a [B, n] block -> [B] f32."""
+    nz = jnp.sum((xs[:, :n_true] != sr.zero).astype(jnp.int32), axis=1)
     return nz.astype(jnp.float32) / float(n_true)

@@ -1,0 +1,279 @@
+"""Batched multi-source traversals: BFS/SSSP/PPR over a [B, n] frontier
+block (the paper's §4 linear-algebra iteration, lifted to the many-query
+regime the ROADMAP serves).
+
+One ``lax.while_loop`` advances all B queries in lockstep; per-query
+adaptive SpMSpV↔SpMV switching happens as data flow (see
+core.adaptive.adaptive_matvec_batch), and a query that converges is frozen
+— its state rows stop updating and its trace stops recording — so every
+row of the batched result is element-equal to the corresponding
+single-source run (asserted in tests/test_multi_query.py, including the
+kernel-choice trace and per-query iteration counts).
+
+``mesh``/``axis_name`` shard the [B, n] block over devices: queries are
+independent, so the block row-shards with no cross-device traffic beyond
+the scalar convergence reduction.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.adaptive import select_kernel_batch
+from repro.core.semiring import BOOL_OR_AND, MIN_PLUS, PLUS_TIMES
+from repro.graphs.engine import GraphEngine, density_of_batch
+
+Array = jax.Array
+
+
+class BFSBatchResult(NamedTuple):
+    levels: Array       # int32 [B, n_true]; -1 = unreached
+    iterations: Array   # int32 [B]
+    densities: Array    # f32 [B, max_iters]
+    kernel_used: Array  # int32 [B, max_iters]; 0 = SpMSpV, 1 = SpMV, -1 unused
+
+
+class SSSPBatchResult(NamedTuple):
+    dist: Array         # f32 [B, n_true]; +inf = unreachable
+    iterations: Array
+    densities: Array
+    kernel_used: Array
+
+
+class PPRBatchResult(NamedTuple):
+    rank: Array         # f32 [B, n_true]
+    iterations: Array
+    densities: Array
+    kernel_used: Array
+    residual: Array     # f32 [B]
+
+
+def _kernel_codes(policy: str, densities: Array, threshold: float) -> Array:
+    """Per-query kernel trace codes, matching the single-source recording."""
+    if policy == "spmv":
+        return jnp.ones(densities.shape, jnp.int32)
+    if policy == "spmspv":
+        return jnp.zeros(densities.shape, jnp.int32)
+    return select_kernel_batch(densities, threshold)
+
+
+def _constrain_block(x: Array, mesh: Mesh | None, axis_name: str) -> Array:
+    """Row-shard a [B, ...] block over ``axis_name`` when a mesh is given."""
+    if mesh is None:
+        return x
+    spec = P(axis_name, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _masked_trace_update(trace: Array, it: Array, active: Array,
+                         value: Array) -> Array:
+    """trace[:, it] = value where the query is still active."""
+    return trace.at[:, it].set(jnp.where(active, value, trace[:, it]))
+
+
+def make_bfs_multi(engine: GraphEngine, batch: int, max_iters: int = 64,
+                   policy: str = "adaptive", mesh: Mesh | None = None,
+                   axis_name: str = "batch"
+                   ) -> Callable[[Array], BFSBatchResult]:
+    """Build a jitted runner: sources [B] int32 -> BFSBatchResult."""
+    sr = engine.sr
+    assert sr.name == BOOL_OR_AND.name
+    n, b = engine.n, batch
+    step = engine.batch_step_fn(policy)
+
+    def run(sources: Array) -> BFSBatchResult:
+        rows = jnp.arange(b)
+        frontier = jnp.zeros((b, n), sr.dtype).at[rows, sources].set(1)
+        visited = jnp.zeros((b, n), jnp.int32).at[rows, sources].set(1)
+        levels = jnp.full((b, n), -1, jnp.int32).at[rows, sources].set(0)
+        frontier = _constrain_block(frontier, mesh, axis_name)
+        visited = _constrain_block(visited, mesh, axis_name)
+        levels = _constrain_block(levels, mesh, axis_name)
+
+        def cond(state):
+            _f, _v, _l, it, done, _its, _d, _k = state
+            return (~jnp.all(done)) & (it < max_iters)
+
+        def body(state):
+            frontier, visited, levels, it, done, iters, dens, kern = state
+            active = ~done
+            density = density_of_batch(frontier, sr, engine.n_true)
+            used = _kernel_codes(policy, density, engine.threshold)
+            y = step(frontier, density)
+            nf = jnp.where((y != sr.zero) & (visited == 0),
+                           jnp.asarray(1, sr.dtype), jnp.asarray(0, sr.dtype))
+            nf = jnp.where(active[:, None], nf, jnp.zeros_like(nf))
+            levels = jnp.where((nf != 0) & (levels < 0), it + 1, levels)
+            visited = jnp.where(nf != 0, 1, visited)
+            newly_done = jnp.sum(nf, axis=1) == 0
+            iters = jnp.where(active, it + 1, iters)
+            dens = _masked_trace_update(dens, it, active, density)
+            kern = _masked_trace_update(kern, it, active, used)
+            return (nf, visited, levels, it + 1, done | newly_done,
+                    iters, dens, kern)
+
+        state0 = (frontier, visited, levels, jnp.asarray(0, jnp.int32),
+                  jnp.zeros((b,), bool), jnp.zeros((b,), jnp.int32),
+                  jnp.full((b, max_iters), -1.0, jnp.float32),
+                  jnp.full((b, max_iters), -1, jnp.int32))
+        _f, _v, levels, _it, _done, iters, dens, kern = jax.lax.while_loop(
+            cond, body, state0)
+        return BFSBatchResult(levels[:, : engine.n_true], iters, dens, kern)
+
+    return jax.jit(run)
+
+
+def make_sssp_multi(engine: GraphEngine, batch: int, max_iters: int = 64,
+                    policy: str = "adaptive", mesh: Mesh | None = None,
+                    axis_name: str = "batch"
+                    ) -> Callable[[Array], SSSPBatchResult]:
+    """Build a jitted runner: sources [B] int32 -> SSSPBatchResult."""
+    sr = engine.sr
+    assert sr.name == MIN_PLUS.name
+    n, b = engine.n, batch
+    step = engine.batch_step_fn(policy)
+
+    def run(sources: Array) -> SSSPBatchResult:
+        rows = jnp.arange(b)
+        dist = jnp.full((b, n), jnp.inf, jnp.float32).at[rows, sources].set(0.0)
+        changed = jnp.full((b, n), jnp.inf, jnp.float32
+                           ).at[rows, sources].set(0.0)
+        dist = _constrain_block(dist, mesh, axis_name)
+        changed = _constrain_block(changed, mesh, axis_name)
+
+        def cond(state):
+            _di, _ch, it, done, _its, _d, _k = state
+            return (~jnp.all(done)) & (it < max_iters)
+
+        def body(state):
+            dist, changed, it, done, iters, dens, kern = state
+            active = ~done
+            density = density_of_batch(changed, sr, engine.n_true)
+            used = _kernel_codes(policy, density, engine.threshold)
+            cand = step(changed, density)
+            new_dist = jnp.minimum(dist, cand)
+            new_changed = jnp.where(new_dist < dist, new_dist, jnp.inf)
+            new_dist = jnp.where(active[:, None], new_dist, dist)
+            new_changed = jnp.where(active[:, None], new_changed,
+                                    jnp.full_like(new_changed, jnp.inf))
+            newly_done = jnp.sum((new_changed != jnp.inf).astype(jnp.int32),
+                                 axis=1) == 0
+            iters = jnp.where(active, it + 1, iters)
+            dens = _masked_trace_update(dens, it, active, density)
+            kern = _masked_trace_update(kern, it, active, used)
+            return (new_dist, new_changed, it + 1, done | newly_done,
+                    iters, dens, kern)
+
+        state0 = (dist, changed, jnp.asarray(0, jnp.int32),
+                  jnp.zeros((b,), bool), jnp.zeros((b,), jnp.int32),
+                  jnp.full((b, max_iters), -1.0, jnp.float32),
+                  jnp.full((b, max_iters), -1, jnp.int32))
+        dist, _ch, _it, _done, iters, dens, kern = jax.lax.while_loop(
+            cond, body, state0)
+        return SSSPBatchResult(dist[:, : engine.n_true], iters, dens, kern)
+
+    return jax.jit(run)
+
+
+def make_ppr_multi(engine: GraphEngine, batch: int, alpha: float = 0.85,
+                   max_iters: int = 50, tol: float = 1e-6,
+                   policy: str = "adaptive", mesh: Mesh | None = None,
+                   axis_name: str = "batch"
+                   ) -> Callable[[Array], PPRBatchResult]:
+    """Build a jitted runner: sources [B] int32 -> PPRBatchResult."""
+    sr = engine.sr
+    assert sr.name == PLUS_TIMES.name
+    n, b = engine.n, batch
+    step = engine.batch_step_fn(policy)
+
+    def run(sources: Array) -> PPRBatchResult:
+        rows = jnp.arange(b)
+        e_s = jnp.zeros((b, n), jnp.float32).at[rows, sources].set(1.0)
+        e_s = _constrain_block(e_s, mesh, axis_name)
+
+        def cond(state):
+            _r, it, res, _its, _d, _k = state
+            return jnp.any(res > tol) & (it < max_iters)
+
+        def body(state):
+            r, it, res, iters, dens, kern = state
+            active = res > tol
+            density = density_of_batch(r, sr, engine.n_true)
+            used = _kernel_codes(policy, density, engine.threshold)
+            pr = step(r, density)
+            r_new = (1.0 - alpha) * e_s + alpha * pr
+            res_new = jnp.sum(jnp.abs(r_new - r), axis=1)
+            r = jnp.where(active[:, None], r_new, r)
+            res = jnp.where(active, res_new, res)
+            iters = jnp.where(active, it + 1, iters)
+            dens = _masked_trace_update(dens, it, active, density)
+            kern = _masked_trace_update(kern, it, active, used)
+            return (r, it + 1, res, iters, dens, kern)
+
+        state0 = (e_s, jnp.asarray(0, jnp.int32),
+                  jnp.full((b,), jnp.inf, jnp.float32),
+                  jnp.zeros((b,), jnp.int32),
+                  jnp.full((b, max_iters), -1.0, jnp.float32),
+                  jnp.full((b, max_iters), -1, jnp.int32))
+        r, _it, res, iters, dens, kern = jax.lax.while_loop(cond, body, state0)
+        return PPRBatchResult(r[:, : engine.n_true], iters, dens, kern, res)
+
+    return jax.jit(run)
+
+
+_MAKERS = {"bfs": make_bfs_multi, "sssp": make_sssp_multi,
+           "ppr": make_ppr_multi}
+
+
+def _cached_runner(engine: GraphEngine, alg: str, batch: int, mesh,
+                   axis_name: str, **kwargs):
+    """One jitted runner per (engine, alg, batch, options) — GraphEngine is
+    an unhashable dataclass, so runners live in its instance __dict__."""
+    cache = engine.__dict__.setdefault("_multi_runners", {})
+    key = (alg, batch, id(mesh), axis_name, tuple(sorted(kwargs.items())))
+    if key not in cache:
+        cache[key] = _MAKERS[alg](engine, batch, mesh=mesh,
+                                  axis_name=axis_name, **kwargs)
+    return cache[key]
+
+
+def _as_sources(sources) -> Array:
+    src = jnp.asarray(np.asarray(sources), jnp.int32)
+    assert src.ndim == 1, "sources must be a flat [B] list/array"
+    return src
+
+
+def bfs_multi(engine: GraphEngine, sources, max_iters: int = 64,
+              policy: str = "adaptive", mesh: Mesh | None = None,
+              axis_name: str = "batch") -> BFSBatchResult:
+    """Multi-source BFS; row b equals bfs(engine, sources[b])."""
+    src = _as_sources(sources)
+    run = _cached_runner(engine, "bfs", int(src.shape[0]), mesh, axis_name,
+                         max_iters=max_iters, policy=policy)
+    return run(src)
+
+
+def sssp_multi(engine: GraphEngine, sources, max_iters: int = 64,
+               policy: str = "adaptive", mesh: Mesh | None = None,
+               axis_name: str = "batch") -> SSSPBatchResult:
+    """Multi-source SSSP; row b equals sssp(engine, sources[b])."""
+    src = _as_sources(sources)
+    run = _cached_runner(engine, "sssp", int(src.shape[0]), mesh, axis_name,
+                         max_iters=max_iters, policy=policy)
+    return run(src)
+
+
+def ppr_multi(engine: GraphEngine, sources, alpha: float = 0.85,
+              max_iters: int = 50, tol: float = 1e-6,
+              policy: str = "adaptive", mesh: Mesh | None = None,
+              axis_name: str = "batch") -> PPRBatchResult:
+    """Multi-source PPR; row b equals ppr(engine, sources[b])."""
+    src = _as_sources(sources)
+    run = _cached_runner(engine, "ppr", int(src.shape[0]), mesh, axis_name,
+                         alpha=alpha, max_iters=max_iters, tol=tol,
+                         policy=policy)
+    return run(src)

@@ -160,7 +160,7 @@ def lower_cell(arch_id: str, shape_name: str, mesh, tcfg: TrainConfig):
 
     n_dev = int(np.prod(list(mesh.shape.values())))
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = hlo_analysis.normalize_cost_analysis(compiled.cost_analysis())
     hlo = compiled.as_text()
     ana = hlo_analysis.analyze(hlo, n_dev, pod_size=256)
     terms = hlo_analysis.roofline_terms(ana)

@@ -87,8 +87,7 @@ def main():
     from repro.train.grad_compress import ef_init
     from repro.train.optimizer import OptConfig, adamw_init
     from repro.train.train_loop import (
-        TrainConfig, batch_sharding, make_compressed_train_step,
-        make_train_step,
+        TrainConfig, make_compressed_train_step, make_train_step,
     )
 
     cfg = scaled_config(get_config(args.arch), args.scale)

@@ -3,7 +3,7 @@ SWA cache), DeepSeek-V2 MLA (compressed-latent cache, absorbed decode), and
 gated cross-attention (VLM)."""
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -3,7 +3,7 @@ and sharding (divisibility-aware logical-axis rules)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -18,15 +18,14 @@ through the scans as xs/ys.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import attention as attn
-from repro.models.config import ModelConfig, ShapeConfig
-from repro.models.layers import KVCache, rms_norm, swiglu
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_norm, swiglu
 from repro.models.moe import moe_ffn
 from repro.models.params import P_, init_params, shape_struct
 from repro.models.ssm import (

@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+from repro.models.config import ModelConfig, ShapeConfig
 from repro.models.params import is_spec
 from repro.models.transformer import Model, build_model
 

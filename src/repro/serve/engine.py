@@ -11,7 +11,7 @@ temperature sampling over a static batch with per-request stop handling.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,191 @@
+"""Multi-query graph traversal server: batches incoming (algorithm, source)
+requests and drains them through the batched engine (graphs/multi.py).
+
+The request-batching idiom mirrors serve/engine.py's ServingEngine: callers
+``submit`` requests, then ``flush`` pads each algorithm's pending sources to
+a fixed batch bucket and runs one jitted multi-source traversal per bucket —
+one compile per (algorithm, bucket), reused forever. Two serving-side
+optimizations ride on top:
+
+* **dedup** — repeated sources inside a flush compute once and fan out;
+* **LRU result cache** — answers served before (per algorithm+source) skip
+  the engine entirely, bounded by ``cache_capacity``.
+
+A ``mesh`` row-shards each [B, n] traversal block over devices (queries are
+independent), which is how one server saturates an 8-device host.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.adaptive import DecisionStump
+from repro.core.semiring import BOOL_OR_AND, MIN_PLUS, PLUS_TIMES
+from repro.graphs.cost_model import trained_stump
+from repro.graphs.datasets import Graph
+from repro.graphs.engine import GraphEngine, build_engine
+from repro.graphs.multi import bfs_multi, ppr_multi, sssp_multi
+
+ALGORITHMS = ("bfs", "sssp", "ppr")
+
+
+@dataclasses.dataclass
+class GraphRequest:
+    """One traversal query. ``result`` is filled by flush(); ``cached`` marks
+    answers served from the LRU instead of the engine."""
+
+    algorithm: str
+    source: int
+    result: Optional[Dict[str, Any]] = None
+    cached: bool = False
+
+
+class LRUCache:
+    """Bounded (algorithm, source) -> result-dict map, LRU eviction."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self._d: OrderedDict[Tuple[str, int], Dict[str, Any]] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def get(self, key: Tuple[str, int]) -> Optional[Dict[str, Any]]:
+        if key in self._d:
+            self._d.move_to_end(key)
+            self.hits += 1
+            return self._d[key]
+        self.misses += 1
+        return None
+
+    def put(self, key: Tuple[str, int], value: Dict[str, Any]) -> None:
+        if self.capacity <= 0:
+            return
+        self._d[key] = value
+        self._d.move_to_end(key)
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+
+
+class GraphQueryServer:
+    """Batching front-end over one graph: build per-semiring engines lazily,
+    queue queries, drain them in fixed-size buckets."""
+
+    def __init__(self, graph: Graph, stump: DecisionStump | None = None,
+                 batch_size: int = 8, cache_capacity: int = 1024,
+                 max_iters: int = 64, policy: str = "adaptive",
+                 alpha: float = 0.85, weight_seed: int = 5,
+                 mesh=None, axis_name: str = "batch"):
+        self.graph = graph
+        self.stump = stump or trained_stump()
+        self.batch_size = batch_size
+        self.max_iters = max_iters
+        self.policy = policy
+        self.alpha = alpha
+        self.weight_seed = weight_seed
+        self.mesh = mesh
+        self.axis_name = axis_name
+        self.cache = LRUCache(cache_capacity)
+        self._engines: Dict[str, GraphEngine] = {}
+        self._queue: List[GraphRequest] = []
+        self.stats = {"submitted": 0, "served": 0, "cache_hits": 0,
+                      "deduped": 0, "batches": 0}
+
+    # ------------------------------------------------------------------
+    def engine(self, algorithm: str) -> GraphEngine:
+        """The per-algorithm GraphEngine (built on first use)."""
+        if algorithm not in self._engines:
+            g, stump = self.graph, self.stump
+            if algorithm == "bfs":
+                eng = build_engine(g, BOOL_OR_AND, stump)
+            elif algorithm == "sssp":
+                eng = build_engine(g, MIN_PLUS, stump, weighted=True,
+                                   seed=self.weight_seed)
+            elif algorithm == "ppr":
+                eng = build_engine(g, PLUS_TIMES, stump, normalize=True)
+            else:
+                raise ValueError(f"unknown algorithm {algorithm!r}; "
+                                 f"expected one of {ALGORITHMS}")
+            self._engines[algorithm] = eng
+        return self._engines[algorithm]
+
+    def submit(self, algorithm: str, source: int) -> GraphRequest:
+        """Enqueue one query; resolution happens at the next flush()."""
+        if algorithm not in ALGORITHMS:
+            raise ValueError(f"unknown algorithm {algorithm!r}")
+        if not 0 <= source < self.graph.n:
+            raise ValueError(f"source {source} out of range [0, {self.graph.n})")
+        req = GraphRequest(algorithm, int(source))
+        self._queue.append(req)
+        self.stats["submitted"] += 1
+        return req
+
+    # ------------------------------------------------------------------
+    def _run_batch(self, algorithm: str, sources: List[int]
+                   ) -> Dict[int, Dict[str, Any]]:
+        """One padded engine call for deduped ``sources`` -> per-source dicts."""
+        eng = self.engine(algorithm)
+        padded = sources + [sources[-1]] * (self.batch_size - len(sources))
+        kw = dict(policy=self.policy, mesh=self.mesh,
+                  axis_name=self.axis_name)
+        if algorithm == "bfs":
+            res = bfs_multi(eng, padded, max_iters=self.max_iters, **kw)
+            rows = {"levels": np.asarray(res.levels)}
+        elif algorithm == "sssp":
+            res = sssp_multi(eng, padded, max_iters=self.max_iters, **kw)
+            rows = {"dist": np.asarray(res.dist)}
+        else:
+            res = ppr_multi(eng, padded, alpha=self.alpha,
+                            max_iters=self.max_iters, **kw)
+            rows = {"rank": np.asarray(res.rank),
+                    "residual": np.asarray(res.residual)}
+        iters = np.asarray(res.iterations)
+        self.stats["batches"] += 1
+        out = {}
+        for i, s in enumerate(sources):
+            payload = {k: v[i] for k, v in rows.items()}
+            payload["iterations"] = int(iters[i])
+            out[s] = payload
+        return out
+
+    def flush(self) -> List[GraphRequest]:
+        """Resolve every queued request: cache -> dedup -> padded batches.
+        Returns the requests in submission order, results attached."""
+        queue, self._queue = self._queue, []
+        by_alg: Dict[str, List[GraphRequest]] = {}
+        for req in queue:
+            by_alg.setdefault(req.algorithm, []).append(req)
+
+        for algorithm, reqs in by_alg.items():
+            fresh: Dict[int, Dict[str, Any]] = {}
+            misses: List[int] = []
+            seen = set()
+            for req in reqs:
+                hit = self.cache.get((algorithm, req.source))
+                if hit is not None:
+                    # shallow copy: the dict is per-request, the numpy
+                    # payloads stay shared (treat them as read-only)
+                    req.result = dict(hit)
+                    req.cached = True
+                    self.stats["cache_hits"] += 1
+                elif req.source not in seen:
+                    seen.add(req.source)
+                    misses.append(req.source)
+                else:
+                    self.stats["deduped"] += 1
+            for lo in range(0, len(misses), self.batch_size):
+                chunk = misses[lo: lo + self.batch_size]
+                fresh.update(self._run_batch(algorithm, chunk))
+            for src, payload in fresh.items():
+                self.cache.put((algorithm, src), payload)
+            for req in reqs:
+                if req.result is None:
+                    req.result = dict(fresh[req.source])
+
+        self.stats["served"] += len(queue)
+        return queue

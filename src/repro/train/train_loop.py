@@ -15,8 +15,7 @@ with the slice, not the global batch (how the train_4k cells fit HBM).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -27,10 +26,25 @@ from repro.distributed.sharding import (
     zero1_shardings,
 )
 from repro.models.transformer import Model
-from repro.train.grad_compress import compressed_tree_psum_mean, ef_init
+from repro.train.grad_compress import compressed_tree_psum_mean
 from repro.train.optimizer import OptConfig, OptState, adamw_apply, adamw_init
 
 Array = jax.Array
+
+
+def partial_shard_map(body, mesh: Mesh, manual_axes, in_specs, out_specs):
+    """shard_map that is manual only over ``manual_axes``; the remaining mesh
+    axes stay automatic (SPMD-partitioned). jax >= 0.6 spells this
+    ``jax.shard_map(axis_names=...)``; older releases only ship
+    ``jax.experimental.shard_map.shard_map(auto=...)``."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(body, mesh=mesh, axis_names=set(manual_axes),
+                             check_vma=False, in_specs=in_specs,
+                             out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = frozenset(mesh.axis_names) - frozenset(manual_axes)
+    return _shard_map(body, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=False, auto=auto)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -137,6 +151,42 @@ def make_compressed_train_step(model: Model, mesh: Mesh, cfg: TrainConfig):
     )
     ef_sh = zero1_shardings(mesh, specs)
 
+    if not hasattr(jax, "shard_map"):
+        # jax < 0.5 fallback: partial-manual shard_map CHECK-crashes this
+        # XLA's SPMD partitioner on any nontrivial body (probed), so per-pod
+        # gradients are expressed as a vmap over a leading pod axis under
+        # pure pjit — the [GB] -> [n_pod, GB/n_pod] batch reshape lets XLA
+        # run the vmapped grads pod-parallel, and the mean over axis 0 is
+        # the cross-pod reduction. int8+EF numerics match the manual path
+        # up to the shared (mean) error-feedback buffer.
+        from repro.train.grad_compress import compressed_tree_stacked_mean
+        n_pod = dict(mesh.shape)["pod"]
+
+        def body_vmap(params, opt_state, ef, batch):
+            from repro.distributed.sharding import (
+                activation_mesh, set_activation_mesh)
+            prev = activation_mesh()
+            set_activation_mesh(None)
+            try:
+                slices = _split_micro(batch, n_pod)
+
+                def pod_grads(mb):
+                    g, l, _ = _grads_and_loss(model, params, mb, cfg)
+                    return g, l
+
+                grads_p, loss_p = jax.vmap(pod_grads)(slices)
+            finally:
+                set_activation_mesh(prev)
+            grads, ef = compressed_tree_stacked_mean(grads_p, ef)
+            loss = jnp.mean(loss_p)
+            params, opt_state, om = adamw_apply(params, grads, opt_state,
+                                                cfg.opt)
+            return params, opt_state, ef, {"loss": loss, **om}
+
+        return jax.jit(body_vmap,
+                       in_shardings=(p_sh, opt_sh, ef_sh, None),
+                       out_shardings=(p_sh, opt_sh, ef_sh, None))
+
     def body(params, opt_state, ef, batch):
         # trace WITHOUT activation constraints: XLA's SPMD partitioner
         # CHECK-crashes on with_sharding_constraint specs inside a
@@ -156,8 +206,8 @@ def make_compressed_train_step(model: Model, mesh: Mesh, cfg: TrainConfig):
         params, opt_state, om = adamw_apply(params, grads, opt_state, cfg.opt)
         return params, opt_state, ef, {"loss": loss, **om}
 
-    shard_body = jax.shard_map(
-        body, mesh=mesh, axis_names={"pod"}, check_vma=False,
+    shard_body = partial_shard_map(
+        body, mesh, manual_axes={"pod"},
         in_specs=(P(), P(), P(), P("pod")),
         out_specs=(P(), P(), P(), P()),
     )

@@ -1,14 +1,15 @@
 """Core semiring sparse engine: formats × semirings vs the dense oracle,
 plus algebraic property tests (hypothesis)."""
-import hypothesis
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+
 from repro.core import (
     BOOL_OR_AND, MIN_PLUS, PLUS_TIMES,
-    build_coo, build_csc, build_csr, build_bsr, build_bsr_padded,
+    build_coo, build_csc, build_csr, build_bsr,
     frontier_from_dense, spmspv, spmv, spmv_bsr_ref,
 )
 

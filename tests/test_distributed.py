@@ -21,7 +21,11 @@ n = 128
 dense_np = (rng.random((n, n)) < 0.08).astype(np.float32) * rng.integers(1, 9, (n, n))
 rows, cols = np.nonzero(dense_np)
 vals = dense_np[rows, cols].astype(np.float32)
-mesh = jax.make_mesh((2, 4), ("dr", "dc"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+if hasattr(jax.sharding, "AxisType"):
+    mesh = jax.make_mesh((2, 4), ("dr", "dc"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+else:  # jax < 0.5: make_mesh axes are Auto by default
+    mesh = jax.make_mesh((2, 4), ("dr", "dc"))
 
 checked = 0
 for sr in (PLUS_TIMES, MIN_PLUS, BOOL_OR_AND):
@@ -65,3 +69,63 @@ def test_distributed_strategies_8dev():
                          capture_output=True, text=True, timeout=900)
     assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
     assert "DISTRIBUTED_OK 21" in res.stdout, res.stdout
+
+
+BATCHED_WORKER = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import *
+from repro.core.distributed import make_distributed_batched_matvec
+
+rng = np.random.default_rng(2)
+n, B = 128, 4
+dense_np = (rng.random((n, n)) < 0.08).astype(np.float32) * rng.integers(1, 9, (n, n))
+rows, cols = np.nonzero(dense_np)
+vals = dense_np[rows, cols].astype(np.float32)
+mesh = jax.make_mesh((2, 4), ("dr", "dc"))
+
+checked = 0
+for sr in (PLUS_TIMES, MIN_PLUS, BOOL_OR_AND):
+    if sr.name == "min_plus":
+        dense = np.where(dense_np != 0, dense_np, np.inf).astype(np.float32)
+        X = np.where(rng.random((B, n)) < 0.3, rng.random((B, n)), np.inf).astype(np.float32)
+        v = vals; fill = np.inf
+    elif sr.name == "bool_or_and":
+        dense = (dense_np != 0).astype(np.int32)
+        X = (rng.random((B, n)) < 0.3).astype(np.int32)
+        v = np.ones_like(vals, dtype=np.int32); fill = 0
+    else:
+        dense = dense_np
+        X = np.where(rng.random((B, n)) < 0.3, rng.random((B, n)), 0).astype(np.float32)
+        v = vals; fill = 0.0
+    oracle = np.stack([np.asarray(sr.matvec(jnp.asarray(dense, sr.dtype),
+                                            jnp.asarray(x, sr.dtype))) for x in X])
+    for strategy, grid, fmt, kern in [("row", (8, 1), "csr", "spmv"),
+                                      ("col", (1, 8), "csc", "spmspv"),
+                                      ("2d", (2, 4), "csc", "spmspv"),
+                                      ("2d", (2, 4), "coo", "spmv")]:
+        pm = partition(rows, cols, v, (n, n), grid, fmt, sr)
+        n_pad = pm.shape[1]
+        Xp = np.full((B, n_pad), fill, dtype=X.dtype); Xp[:, :n] = X
+        xs = jnp.asarray(Xp.reshape(B, 8, -1).transpose(1, 0, 2), sr.dtype)  # [D, B, n_per]
+        fn = make_distributed_batched_matvec(mesh, pm, sr, strategy, kernel=kern)
+        y = np.asarray(jax.jit(fn)(pm.parts, xs))
+        yf = y.transpose(1, 0, 2).reshape(B, -1)[:, :n]
+        np.testing.assert_allclose(yf, oracle, rtol=1e-5,
+                                   err_msg=f"{sr.name}/{strategy}/{fmt}/{kern}")
+        checked += 1
+print(f"BATCHED_DISTRIBUTED_OK {checked}")
+"""
+
+
+@pytest.mark.slow
+def test_distributed_batched_matvec_8dev():
+    """[B, n]-block matvec over the Fig.-3 partitioning strategies: every
+    row must match the dense semiring oracle (the multi-query mesh path)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = REPO_SRC + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run([sys.executable, "-c", BATCHED_WORKER], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
+    assert "BATCHED_DISTRIBUTED_OK 12" in res.stdout, res.stdout

@@ -1,0 +1,97 @@
+"""GraphQueryServer: batching, source dedup, LRU caching, and answer
+fidelity against the single-source apps (serve/graph_engine.py)."""
+import numpy as np
+import pytest
+
+from repro.graphs import bfs, generate, ppr, sssp
+from repro.serve.graph_engine import GraphQueryServer, LRUCache
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return generate("face", scale=0.15, seed=1)
+
+
+@pytest.fixture()
+def server(graph):
+    return GraphQueryServer(graph, batch_size=4, cache_capacity=64)
+
+
+def test_results_match_single_source(server, graph):
+    rng = np.random.default_rng(0)
+    srcs = [int(s) for s in rng.integers(0, graph.n, 5)]
+    reqs = [server.submit("bfs", s) for s in srcs]
+    reqs += [server.submit("sssp", srcs[0]), server.submit("ppr", srcs[1])]
+    done = server.flush()
+    assert done == reqs and all(r.result is not None for r in done)
+
+    ref = bfs(server.engine("bfs"), srcs[2])
+    got = done[2].result
+    np.testing.assert_array_equal(got["levels"], np.asarray(ref.levels))
+    assert got["iterations"] == int(ref.iterations)
+
+    ref_s = sssp(server.engine("sssp"), srcs[0])
+    np.testing.assert_allclose(done[5].result["dist"],
+                               np.asarray(ref_s.dist), rtol=1e-6)
+    ref_p = ppr(server.engine("ppr"), srcs[1])
+    np.testing.assert_allclose(done[6].result["rank"],
+                               np.asarray(ref_p.rank), rtol=1e-5, atol=1e-8)
+
+
+def test_dedup_and_cache(server, graph):
+    s = int(graph.n // 2)
+    r1 = server.submit("bfs", s)
+    r2 = server.submit("bfs", s)          # same flush -> deduped
+    server.flush()
+    assert server.stats["deduped"] == 1
+    assert server.stats["batches"] == 1   # one padded batch for one source
+    np.testing.assert_array_equal(r1.result["levels"], r2.result["levels"])
+    assert not r1.cached and not r2.cached
+
+    r3 = server.submit("bfs", s)          # later flush -> LRU hit
+    server.flush()
+    assert r3.cached and server.stats["cache_hits"] == 1
+    assert server.stats["batches"] == 1   # engine never re-ran
+    np.testing.assert_array_equal(r3.result["levels"], r1.result["levels"])
+
+
+def test_batching_chunks_large_floods(server, graph):
+    srcs = list(range(10))                # 10 distinct > batch_size=4
+    for s in srcs:
+        server.submit("bfs", s)
+    done = server.flush()
+    assert len(done) == 10
+    assert server.stats["batches"] == 3   # ceil(10 / 4)
+    assert all(r.result is not None for r in done)
+
+
+def test_submit_validation(server, graph):
+    with pytest.raises(ValueError):
+        server.submit("pagerank_global", 0)
+    with pytest.raises(ValueError):
+        server.submit("bfs", graph.n + 5)
+
+
+def test_lru_eviction_bound():
+    c = LRUCache(capacity=2)
+    c.put(("bfs", 1), {"a": 1})
+    c.put(("bfs", 2), {"a": 2})
+    c.put(("bfs", 3), {"a": 3})
+    assert len(c) == 2
+    assert c.get(("bfs", 1)) is None      # evicted (oldest)
+    assert c.get(("bfs", 3)) is not None
+    # touching 2 makes 3 the eviction candidate
+    c.get(("bfs", 2))
+    c.put(("bfs", 4), {"a": 4})
+    assert c.get(("bfs", 2)) is not None and c.get(("bfs", 3)) is None
+
+
+def test_mixed_algorithms_one_flush(server, graph):
+    rng = np.random.default_rng(5)
+    subs = [(alg, int(s)) for alg in ("bfs", "sssp", "ppr")
+            for s in rng.integers(0, graph.n, 2)]
+    reqs = [server.submit(a, s) for a, s in subs]
+    server.flush()
+    for (alg, _s), req in zip(subs, reqs):
+        key = {"bfs": "levels", "sssp": "dist", "ppr": "rank"}[alg]
+        assert key in req.result and req.result["iterations"] >= 1

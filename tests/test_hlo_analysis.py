@@ -1,7 +1,6 @@
 """Pure-text unit tests for the structural HLO analyzer (no jax devices):
 loop multipliers, replica-group parsing (explicit + iota), wire models,
 touch-accurate fusion accounting."""
-import numpy as np
 
 from repro.launch import hlo_analysis as H
 

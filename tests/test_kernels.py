@@ -1,10 +1,11 @@
 """Per-kernel validation: Pallas (interpret=True) vs ref.py oracle vs dense
 semiring matvec, swept over shapes, densities, semirings and dtypes."""
-import hypothesis
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 
 from repro.core import (
     BOOL_OR_AND, MIN_PLUS, PLUS_TIMES, build_bsr_padded, frontier_from_dense,

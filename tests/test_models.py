@@ -103,7 +103,6 @@ def test_param_counts_match_published():
 
 def test_swa_ring_buffer_matches_full_cache():
     """Sliding-window ring buffer decode == full-cache decode (window ≥ S)."""
-    from repro.models.config import ModelConfig
     import dataclasses
     cfg = reduced_config("mixtral-8x22b")
     cfg_full = dataclasses.replace(cfg, sliding_window=0)

@@ -1,10 +1,11 @@
 """MoE dispatch-gather Pallas kernel vs its jnp oracle: shape/dtype sweep
 plus a hypothesis property sweep, and consistency with the production
 sort-based dispatch's gather stage."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops

@@ -1,0 +1,120 @@
+"""Batched multi-source traversal equivalence: every row of a B=8 batch
+must match the corresponding single-source run — outputs, per-query
+iteration counts, and the adaptive kernel-switch trace — on both a
+scale-free and a regular synthetic graph (ISSUE 1 acceptance)."""
+import numpy as np
+import pytest
+
+from repro.core import BOOL_OR_AND, MIN_PLUS, PLUS_TIMES
+from repro.graphs import (
+    bfs, bfs_multi, generate, ppr, ppr_multi, sssp, sssp_multi,
+)
+from repro.graphs.cost_model import trained_stump
+from repro.graphs.engine import build_engine
+
+B = 8
+GRAPHS = {
+    "scale_free": ("face", 0.15),    # heavy-tailed -> 50% switch threshold
+    "regular": ("p2p-24", 0.12),     # low-variance -> 20% switch threshold
+}
+
+
+@pytest.fixture(scope="module")
+def stump():
+    return trained_stump()
+
+
+@pytest.fixture(scope="module", params=sorted(GRAPHS))
+def graph_and_sources(request):
+    abbrev, scale = GRAPHS[request.param]
+    g = generate(abbrev, scale=scale, seed=1)
+    rng = np.random.default_rng(42)
+    sources = [int(s) for s in rng.integers(0, g.n, B)]
+    return request.param, g, sources
+
+
+def _check_traces(batch_res, single_res, i):
+    assert int(batch_res.iterations[i]) == int(single_res.iterations)
+    np.testing.assert_array_equal(np.asarray(batch_res.kernel_used[i]),
+                                  np.asarray(single_res.kernel_used))
+    np.testing.assert_allclose(np.asarray(batch_res.densities[i]),
+                               np.asarray(single_res.densities))
+
+
+@pytest.mark.parametrize("policy", ["adaptive", "spmv", "spmspv"])
+def test_bfs_multi_matches_single(graph_and_sources, stump, policy):
+    cls, g, sources = graph_and_sources
+    eng = build_engine(g, BOOL_OR_AND, stump)
+    assert eng.graph_class == ("scale_free" if cls == "scale_free"
+                               else "regular")
+    res = bfs_multi(eng, sources, policy=policy)
+    for i, s in enumerate(sources):
+        ref = bfs(eng, s, policy=policy)
+        np.testing.assert_array_equal(np.asarray(res.levels[i]),
+                                      np.asarray(ref.levels))
+        _check_traces(res, ref, i)
+
+
+def test_sssp_multi_matches_single(graph_and_sources, stump):
+    _cls, g, sources = graph_and_sources
+    eng = build_engine(g, MIN_PLUS, stump, weighted=True, seed=5)
+    res = sssp_multi(eng, sources)
+    for i, s in enumerate(sources):
+        ref = sssp(eng, s)
+        np.testing.assert_allclose(np.asarray(res.dist[i]),
+                                   np.asarray(ref.dist), rtol=1e-6)
+        _check_traces(res, ref, i)
+
+
+def test_ppr_multi_matches_single(graph_and_sources, stump):
+    _cls, g, sources = graph_and_sources
+    eng = build_engine(g, PLUS_TIMES, stump, normalize=True)
+    res = ppr_multi(eng, sources)
+    for i, s in enumerate(sources):
+        ref = ppr(eng, s)
+        np.testing.assert_allclose(np.asarray(res.rank[i]),
+                                   np.asarray(ref.rank), rtol=1e-5, atol=1e-8)
+        np.testing.assert_allclose(float(res.residual[i]),
+                                   float(ref.residual), rtol=1e-4, atol=1e-9)
+        _check_traces(res, ref, i)
+
+
+def test_multi_freezes_converged_queries(stump):
+    """A batch mixing trivially-convergent and long-running queries must
+    freeze the early finishers: per-query iteration counts differ inside
+    one batched while_loop."""
+    g = generate("face", scale=0.15, seed=1)
+    eng = build_engine(g, BOOL_OR_AND, stump)
+    deg = np.bincount(g.rows, minlength=g.n)
+    hub = int(np.argmax(deg))
+    # an isolated-ish vertex: minimal out-degree (BFS from it ends fast)
+    lone = int(np.argmin(deg + (deg == 0) * g.n))
+    res = bfs_multi(eng, [hub, lone, hub, lone])
+    iters = np.asarray(res.iterations)
+    assert iters[0] == iters[2] and iters[1] == iters[3]
+    ref_hub, ref_lone = bfs(eng, hub), bfs(eng, lone)
+    assert iters[0] == int(ref_hub.iterations)
+    assert iters[1] == int(ref_lone.iterations)
+    # a frozen query's trace stops recording
+    used = np.asarray(res.kernel_used)
+    assert (used[1, int(iters[1]):] == -1).all()
+
+
+def test_batched_closures_match_unbatched(stump):
+    """Engine-level check: spmv_batch_fn/spmspv_batch_fn rows equal the
+    single-vector closures on the same inputs."""
+    import jax.numpy as jnp
+    g = generate("face", scale=0.15, seed=1)
+    eng = build_engine(g, PLUS_TIMES, stump, normalize=True)
+    rng = np.random.default_rng(0)
+    xs = np.where(rng.random((4, eng.n)) < 0.1,
+                  rng.random((4, eng.n)), 0.0).astype(np.float32)
+    xs_j = jnp.asarray(xs)
+    ys_mv = np.asarray(eng.spmv_batch_fn(xs_j))
+    ys_msv = np.asarray(eng.spmspv_batch_fn(xs_j))
+    for i in range(4):
+        np.testing.assert_allclose(ys_mv[i], np.asarray(eng.spmv_fn(xs_j[i])),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(ys_msv[i],
+                                   np.asarray(eng.spmspv_fn(xs_j[i])),
+                                   rtol=1e-6)

@@ -1,9 +1,11 @@
 """Numerics properties of the sequence mixers and quantized caches:
 chunked/parallel forms must match their single-step recurrences, and int8
 quantization error must respect its analytic bound (hypothesis-driven)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.models.layers import quantize_kv

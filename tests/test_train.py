@@ -6,13 +6,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.models.zoo import reduced_config
 from repro.models.transformer import build_model
-from repro.train.data import DataConfig, SyntheticLM, TokenFile, make_source
+from repro.train.data import DataConfig, SyntheticLM, make_source
 from repro.train.grad_compress import (
-    compressed_psum_mean, dequantize_int8, ef_init, quantize_int8,
+    dequantize_int8, quantize_int8,
 )
 from repro.train.optimizer import (
     OptConfig, adamw_apply, adamw_init, cosine_lr, global_norm,
