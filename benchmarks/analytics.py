@@ -1,0 +1,89 @@
+"""Whole-graph analytics: engine vs sequential CPU reference (Table-4-style
+accounting for the matrix-matrix / whole-vertex workload class).
+
+For each Table-2 family (road / uniform / rmat) this times the four
+analytics apps — connected components, full PageRank, masked-SpGEMM
+triangle counting, k-core decomposition — on the jitted semiring engine
+against their sequential numpy references, and reports speedup plus
+compute utilization (useful semiring op rate / measured dense-matmul peak,
+the paper's Table-4 metric on this container).
+
+Useful-op accounting:
+  iterative apps (cc / pagerank / kcore): 2·nnz per SpMV round × rounds
+  triangle count: 2·Σ_k nnz(L[:,k])² — the products a masked L·Lᵀ
+  actually combines (column-outer-product accounting), not the dense
+  upper bound.
+
+    PYTHONPATH=src:. python -m benchmarks.analytics [--quick]
+"""
+from benchmarks import common  # noqa: F401  (pins device count first)
+
+import jax
+import numpy as np
+
+from benchmarks.common import bench_vs_reference, emit, peak_flops_cpu
+from repro.core.semiring import MIN_TIMES, PLUS_AND, PLUS_TIMES
+from repro.core.spgemm import spgemm_masked
+from repro.graphs.analytics import (
+    cc_reference, connected_components, kcore, kcore_reference, lower_triangle,
+    pagerank_reference, triangle_problem, triangle_reference,
+)
+from repro.graphs.cost_model import trained_stump
+from repro.graphs.datasets import generate
+from repro.graphs.engine import build_engine
+from repro.graphs.ppr import pagerank
+
+
+def _bench(name, ds, engine_fn, ref_fn, ops_fn, peak):
+    bench_vs_reference("analytics", f"{ds}/{name}", engine_fn, ref_fn,
+                       ops_fn, peak)
+
+
+def run(quick: bool = False):
+    stump = trained_stump()
+    peak = peak_flops_cpu(512 if quick else 1024)
+    emit("analytics", "peak", gflops=peak / 1e9)
+    # One dataset per Table-2 generator family; scales keep n small enough
+    # for the dense Lᵀ operand of the triangle-count SpGEMM.
+    datasets = ([("r-TX", 0.002), ("p2p-24", 0.08), ("face", 0.25),
+                 ("as00", 0.3)]
+                if not quick else [("face", 0.1), ("r-TX", 0.001)])
+    for ds, scale in datasets:
+        g = generate(ds, scale=scale, seed=0)
+        emit("analytics", f"{ds}/graph", n=g.n, nnz=g.nnz)
+
+        def whole_graph_ops(res):
+            return 2.0 * g.nnz * int(res.iterations)
+
+        # Connected components (⟨min,×⟩ label flooding)
+        eng = build_engine(g, MIN_TIMES, stump)
+        _bench("cc", ds, jax.jit(lambda: connected_components(eng)),
+               lambda: cc_reference(g.rows, g.cols, g.n),
+               whole_graph_ops, peak)
+
+        # Full PageRank (⟨+,×⟩ power iteration, dense from step 0)
+        eng = build_engine(g, PLUS_TIMES, stump, normalize=True)
+        _bench("pagerank", ds, jax.jit(lambda: pagerank(eng)),
+               lambda: pagerank_reference(g.rows, g.cols, g.n),
+               whole_graph_ops, peak)
+
+        # Triangle counting (masked SpGEMM over ⟨+,∧⟩); the container build
+        # is host-side and untimed, like the paper's matrix-load phase.
+        _, lc = lower_triangle(g)
+        col_counts = np.bincount(lc, minlength=g.n).astype(np.float64)
+        tri_ops = 2.0 * float(np.sum(col_counts ** 2))
+        a, b, mask, _ = triangle_problem(g, impl="csr")
+        _bench("triangles", ds,
+               jax.jit(lambda: spgemm_masked(a, b, PLUS_AND, mask).sum()),
+               lambda: triangle_reference(g.rows, g.cols, g.n),
+               lambda _res: tri_ops, peak)
+
+        # k-core decomposition (masked-SpMV degree peel)
+        eng = build_engine(g, PLUS_TIMES, stump)
+        _bench("kcore", ds, jax.jit(lambda: kcore(eng)),
+               lambda: kcore_reference(g.rows, g.cols, g.n),
+               whole_graph_ops, peak)
+
+
+if __name__ == "__main__":
+    run()

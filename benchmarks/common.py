@@ -27,6 +27,23 @@ def timeit(fn, *args, iters: int = 5, warmup: int = 2) -> float:
     return float(np.median(ts))
 
 
+def bench_vs_reference(bench: str, case: str, engine_fn, ref_fn, ops_fn,
+                       peak: float) -> None:
+    """Median-time a jitted engine fn against one sequential-reference run
+    and emit a Table-4-style row (cpu_ms / alpha_pim_ms / speedup /
+    util_pct). ``ops_fn(result)`` -> useful semiring ops for utilization.
+    The warmup run's result is reused for ops_fn, so the engine executes
+    exactly warmup+iters times."""
+    result = jax.block_until_ready(engine_fn())   # warmup, result kept
+    t_pim = timeit(engine_fn, iters=3, warmup=0)
+    t0 = time.perf_counter()
+    ref_fn()
+    t_cpu = time.perf_counter() - t0
+    util = ops_fn(result) / t_pim / peak
+    emit(bench, case, cpu_ms=t_cpu * 1e3, alpha_pim_ms=t_pim * 1e3,
+         speedup=t_cpu / t_pim, util_pct=util * 100)
+
+
 _rows = []
 
 

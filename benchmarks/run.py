@@ -1,8 +1,17 @@
 """Benchmark driver: one module per paper table/figure + the roofline
-aggregation. ``python -m benchmarks.run [--quick] [--only fig7,...]``."""
+aggregation. Covers every benchmark module with a ``run(quick=...)``
+entrypoint (asserted by tests/test_benchmarks_registry.py).
+
+    python -m benchmarks.run [--quick] [--only fig7,...] [--json out.json]
+
+``--json`` dumps every emitted metric row to a JSON file — CI uploads the
+quick-mode rows as a per-commit artifact so the perf trajectory accumulates
+across PRs.
+"""
 from benchmarks import common  # noqa: F401  (pins device count first)
 
 import argparse
+import json
 import time
 import traceback
 
@@ -15,6 +24,7 @@ MODULES = [
     "fig8_scaling",
     "table4_apps",
     "multi_query",
+    "analytics",
     "sensitivity_switch",
     "roofline",
 ]
@@ -25,21 +35,29 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated module substrings")
+    ap.add_argument("--json", default=None,
+                    help="write all emitted metric rows to this JSON file")
     args = ap.parse_args()
 
     failures = []
     for name in MODULES:
         if args.only and not any(s in name for s in args.only.split(",")):
             continue
-        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
         print(f"### {name}", flush=True)
         t0 = time.monotonic()
         try:
+            # import inside the try: a module that fails to import joins
+            # `failures` instead of aborting before the --json dump
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
             mod.run(quick=args.quick)
             print(f"### {name} done in {time.monotonic()-t0:.0f}s", flush=True)
         except Exception as e:
             failures.append((name, repr(e)))
             traceback.print_exc()
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(common.rows(), fh, indent=2, default=float)
+        print(f"### wrote {len(common.rows())} metric rows to {args.json}")
     if failures:
         print("FAILURES:", failures)
         raise SystemExit(1)

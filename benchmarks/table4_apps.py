@@ -9,15 +9,14 @@ dense-matmul peak of this container — the paper's metric, same machine.
 """
 from benchmarks import common  # noqa: F401
 
-import time
-
 import jax
 import numpy as np
 
-from benchmarks.common import emit, peak_flops_cpu, timeit
-from repro.core.semiring import BOOL_OR_AND, MIN_PLUS, PLUS_TIMES
+from benchmarks.common import bench_vs_reference, emit, peak_flops_cpu
+from repro.core.semiring import BOOL_OR_AND, MIN_PLUS, MIN_TIMES, PLUS_TIMES
 from repro.graphs import (
-    bfs, bfs_reference, ppr, ppr_reference, sssp, sssp_reference,
+    bfs, bfs_reference, cc_reference, connected_components, pagerank,
+    pagerank_reference, ppr, ppr_reference, sssp, sssp_reference,
 )
 from repro.graphs.cost_model import trained_stump
 from repro.graphs.datasets import generate, largest_component_source
@@ -35,6 +34,10 @@ def useful_ops(g, res) -> float:
     return max(ops, 2.0 * g.nnz)
 
 
+def _bench(case: str, engine_fn, ref_fn, ops_fn, peak: float) -> None:
+    bench_vs_reference("table4", case, engine_fn, ref_fn, ops_fn, peak)
+
+
 def run(quick: bool = False):
     stump = trained_stump()
     peak = peak_flops_cpu(512 if quick else 1024)
@@ -46,42 +49,38 @@ def run(quick: bool = False):
                      seed=0)
         src = largest_component_source(g)
 
+        def whole_graph_ops(res):
+            return 2.0 * g.nnz * int(res.iterations)
+
         # BFS
         eng = build_engine(g, BOOL_OR_AND, stump)
-        f = jax.jit(lambda: bfs(eng, src, policy="adaptive"))
-        t_pim = timeit(f, iters=3, warmup=1)
-        t0 = time.perf_counter()
-        bfs_reference(g.rows, g.cols, g.n, src)
-        t_cpu = time.perf_counter() - t0
-        res = f()
-        util = useful_ops(g, res) / t_pim / peak
-        emit("table4", f"{ds}/bfs", cpu_ms=t_cpu * 1e3, alpha_pim_ms=t_pim * 1e3,
-             speedup=t_cpu / t_pim, util_pct=util * 100)
+        _bench(f"{ds}/bfs", jax.jit(lambda: bfs(eng, src, policy="adaptive")),
+               lambda: bfs_reference(g.rows, g.cols, g.n, src),
+               lambda res: useful_ops(g, res), peak)
 
         # SSSP
         eng = build_engine(g, MIN_PLUS, stump, weighted=True, seed=5)
         w = edge_values(g, MIN_PLUS, weighted=True, seed=5)
-        f = jax.jit(lambda: sssp(eng, src, policy="adaptive"))
-        t_pim = timeit(f, iters=3, warmup=1)
-        t0 = time.perf_counter()
-        sssp_reference(g.rows, g.cols, w, g.n, src)
-        t_cpu = time.perf_counter() - t0
-        res = f()
-        util = useful_ops(g, res) / t_pim / peak
-        emit("table4", f"{ds}/sssp", cpu_ms=t_cpu * 1e3, alpha_pim_ms=t_pim * 1e3,
-             speedup=t_cpu / t_pim, util_pct=util * 100)
+        _bench(f"{ds}/sssp", jax.jit(lambda: sssp(eng, src, policy="adaptive")),
+               lambda: sssp_reference(g.rows, g.cols, w, g.n, src),
+               lambda res: useful_ops(g, res), peak)
 
         # PPR
         eng = build_engine(g, PLUS_TIMES, stump, normalize=True)
-        f = jax.jit(lambda: ppr(eng, src, policy="adaptive"))
-        t_pim = timeit(f, iters=3, warmup=1)
-        t0 = time.perf_counter()
-        ppr_reference(g.rows, g.cols, g.n, src)
-        t_cpu = time.perf_counter() - t0
-        res = f()
-        util = useful_ops(g, res) / t_pim / peak
-        emit("table4", f"{ds}/ppr", cpu_ms=t_cpu * 1e3, alpha_pim_ms=t_pim * 1e3,
-             speedup=t_cpu / t_pim, util_pct=util * 100)
+        _bench(f"{ds}/ppr", jax.jit(lambda: ppr(eng, src, policy="adaptive")),
+               lambda: ppr_reference(g.rows, g.cols, g.n, src),
+               lambda res: useful_ops(g, res), peak)
+
+        # Full PageRank (whole-graph: dense from step 0, SpMV every round)
+        _bench(f"{ds}/pagerank", jax.jit(lambda: pagerank(eng)),
+               lambda: pagerank_reference(g.rows, g.cols, g.n),
+               whole_graph_ops, peak)
+
+        # Connected components (whole-graph ⟨min,×⟩ label flooding)
+        eng = build_engine(g, MIN_TIMES, stump)
+        _bench(f"{ds}/cc", jax.jit(lambda: connected_components(eng)),
+               lambda: cc_reference(g.rows, g.cols, g.n),
+               whole_graph_ops, peak)
 
 
 if __name__ == "__main__":

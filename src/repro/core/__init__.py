@@ -1,7 +1,8 @@
 """ALPHA-PIM core: semiring sparse linear algebra with adaptive kernel
 selection and mesh-partitioned execution (the paper's contribution)."""
 from repro.core.semiring import (  # noqa: F401
-    BOOL_OR_AND, MIN_PLUS, PLUS_TIMES, SEMIRINGS, Semiring,
+    BOOL_OR_AND, MIN_PLUS, MIN_TIMES, PLUS_AND, PLUS_TIMES, SEMIRINGS,
+    Semiring,
 )
 from repro.core.formats import (  # noqa: F401
     BSRMatrix, COOMatrix, CSCMatrix, CSRMatrix, PaddedBSR,
@@ -9,6 +10,9 @@ from repro.core.formats import (  # noqa: F401
 )
 from repro.core.spmv import (  # noqa: F401
     spmv, spmv_batch, spmv_bsr_ref, spmv_coo, spmv_csr,
+)
+from repro.core.spgemm import (  # noqa: F401
+    spgemm_blocked, spgemm_dense_ref, spgemm_masked, spgemm_sparse_dense,
 )
 from repro.core.spmspv import (  # noqa: F401
     Frontier, frontier_from_dense, spmspv, spmspv_batch, spmspv_csc_gather,

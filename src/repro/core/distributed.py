@@ -32,6 +32,7 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core.partition import PartitionedMatrix
 from repro.core.semiring import Semiring
+from repro.core.spgemm import apply_mask, spgemm_masked
 from repro.core.spmspv import Frontier, frontier_from_dense
 from repro.core.spmspv import spmspv as _spmspv
 from repro.core.spmv import spmv as _spmv
@@ -272,6 +273,127 @@ def make_distributed_batched_matvec(
         return fn2d
 
     raise ValueError(strategy)
+
+
+def _op_reduce_scatter_rows(c: Array, sr: Semiring, axis_name,
+                            axis_size: int) -> Array:
+    """⊕-reduce-scatter over the row dim of a [M, N] partial product —
+    the SpGEMM Retrieve+Merge. Sum fuses to psum_scatter; generic
+    semirings exchange row chunks (all_to_all) then ⊕ locally."""
+    if sr.collective == "psum":
+        return jax.lax.psum_scatter(c, axis_name, scatter_dimension=0,
+                                    tiled=True)
+    m = c.shape[0] // axis_size
+    cs = c.reshape(axis_size, m, c.shape[1])
+    exchanged = jax.lax.all_to_all(cs, axis_name, split_axis=0, concat_axis=0)
+    return sr.add_reduce(exchanged, axis=0)
+
+
+def make_distributed_spgemm(
+    mesh: Mesh,
+    pm: PartitionedMatrix,
+    sr: Semiring,
+    strategy: str,
+    axis_names: Sequence[str] = ("dr", "dc"),
+) -> Callable[..., Array]:
+    """Partitioned masked SpGEMM C = (A ⊕.⊗ B) ⊙ M over the Fig.-3
+    strategies — the matrix-matrix counterpart of make_distributed_matvec.
+    The four-phase accounting carries over with B's *rows* playing the
+    input-vector role (they index A's columns):
+
+        row — A row-sharded; Load = all-gather(B rows); C lands
+              row-sharded; no Retrieve/Merge.
+        col — A col-sharded; B rows stay sharded (no Load); each device
+              emits a full-height partial C; Retrieve+Merge =
+              ⊕-reduce-scatter of C row blocks over the flat axis.
+        2d  — A tiled (R, C); Load = all-gather(B row chunks) over axis_r;
+              Retrieve+Merge = ⊕-reduce-scatter of C rows over axis_c.
+
+    Returns ``fn(parts, b_sharded, mask_sharded=None) -> c_sharded``. B is
+    [D, k_per, N] and C / mask are [D, m_per, N] in the canonical flat
+    layout. The mask is structural (see core.spgemm) and is applied
+    post-merge, on already-sharded output rows — masking never crosses
+    the fabric."""
+    ar, ac = axis_names
+    flat = (ar, ac)
+    r_parts, c_parts = pm.grid
+    d = pm.n_devices
+
+    a_specs = jax.tree.map(lambda _: P(flat), pm.parts)
+
+    def strip_lead(a_tree):
+        return jax.tree.map(lambda x: x[0], a_tree)
+
+    def local_spgemm(a_local, b_full: Array) -> Array:
+        return spgemm_masked(a_local, b_full, sr)
+
+    if strategy == "row":
+        def body(parts, b, mask):
+            a_local = strip_lead(parts)
+            b_full = jax.lax.all_gather(b[0], flat, tiled=True, axis=0)
+            c = local_spgemm(a_local, b_full)           # Kernel
+            c = apply_mask(c, mask[0], sr)
+            return c[None]  # already row-sharded; no Retrieve/Merge
+
+        in_specs = (a_specs, P(flat), P(flat))
+        out_specs = P(flat)
+
+    elif strategy == "col":
+        def body(parts, b, mask):
+            a_local = strip_lead(parts)
+            c_partial = local_spgemm(a_local, b[0])     # Kernel (no Load)
+            c = _op_reduce_scatter_rows(c_partial, sr, flat, d)
+            return apply_mask(c, mask[0], sr)[None]
+
+        in_specs = (a_specs, P(flat), P(flat))
+        out_specs = P(flat)
+
+    elif strategy == "2d":
+        assert (r_parts, c_parts) == (mesh.shape[ar], mesh.shape[ac]), (
+            f"2d grid {pm.grid} != mesh {(mesh.shape[ar], mesh.shape[ac])}")
+
+        def body(parts, b, mask):
+            a_local = strip_lead(strip_lead(parts))
+            # Load: assemble column block c's B rows across axis_r (B rows
+            # use the same column-major 2d input layout as the matvec x).
+            b_cols = jax.lax.all_gather(b[0, 0], ar, tiled=True, axis=0)
+            c_partial = local_spgemm(a_local, b_cols)
+            c = _op_reduce_scatter_rows(c_partial, sr, ac, c_parts)
+            return apply_mask(c, mask[0, 0], sr)[None, None]
+
+        fn_body = shard_map(
+            body, mesh=mesh,
+            in_specs=(jax.tree.map(lambda _: P((ar,), (ac,)), pm.parts),
+                      P(ar, ac), P(ar, ac)),
+            out_specs=P(ar, ac), check_rep=False)
+
+        def fn2d(parts, b, mask=None):
+            if mask is None:
+                mask = jnp.full((d, pm.shape[0] // d, b.shape[2]), sr.one,
+                                sr.dtype)
+            reshaped = jax.tree.map(
+                lambda v: v.reshape((r_parts, c_parts) + v.shape[1:]), parts)
+            # B rows: canonical chunk g → 2d input layout [r, c] = c*R + r.
+            b2 = b.reshape(c_parts, r_parts, *b.shape[1:]).transpose(1, 0, 2, 3)
+            # Output rows land as y2[r, c] = chunk r*C + c (row-major).
+            m2 = mask.reshape(r_parts, c_parts, *mask.shape[1:])
+            c2 = fn_body(reshaped, b2, m2)
+            return c2.reshape(d, *c2.shape[2:])
+
+        return fn2d
+    else:
+        raise ValueError(strategy)
+
+    fn_body = shard_map(body, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs, check_rep=False)
+
+    def fn(parts, b, mask=None):
+        if mask is None:
+            m_per = pm.shape[0] // d
+            mask = jnp.full((d, m_per, b.shape[2]), sr.one, sr.dtype)
+        return fn_body(parts, b, mask)
+
+    return fn
 
 
 def vec_to_2d_layout(x: Array, grid) -> Array:

@@ -2,7 +2,9 @@
 
 A semiring generalizes (+, x) to (add ⊕, mul ⊗) with identities (zero, one).
 The same SpMV/SpMSpV engine then runs BFS (⟨∨,∧⟩), SSSP (⟨min,+⟩) and
-PPR (⟨+,×⟩) just by swapping the semiring — the paper's Table 1.
+PPR (⟨+,×⟩) just by swapping the semiring — the paper's Table 1. The
+analytics subsystem (graphs/analytics.py) extends the table with
+⟨min,×⟩ (connected components) and ⟨+,∧⟩ (triangle counting).
 
 Semirings here are *static* (python-level) objects: kernels stage the chosen
 ops at trace time, so there is no runtime dispatch cost.
@@ -35,6 +37,14 @@ class Semiring:
     one: Any
     dtype: Any
     collective: str  # one of: "psum", "pmin", "pmax", "por"
+
+    @property
+    def mxu_eligible(self) -> bool:
+        """True iff ⟨⊕,⊗⟩ is ordinary ⟨+,×⟩, so a kernel may lower the
+        reduction to jnp.dot on the MXU. ``collective == "psum"`` is NOT
+        sufficient: ⟨+,∧⟩ (triangle counting) ⊕-reduces with psum but its
+        ⊗ is min, which dot would silently get wrong."""
+        return self.add is jnp.add and self.mul is jnp.multiply
 
     def add_reduce(self, x: Array, axis: int | tuple[int, ...]) -> Array:
         if self.collective == "psum":
@@ -114,8 +124,37 @@ PLUS_TIMES = Semiring(
     collective="psum",
 )
 
+# Connected components: ⟨min,×⟩ over ℝ₊∪{∞} — min-label propagation.
+# With unit edge weights, y_i = min_j (1 × l_j) is "smallest neighbour
+# label"; iterating l ← l ⊕ y floods component minima (graphs/analytics.py).
+# Domain constraint: operands must stay strictly positive (inf × 0 = nan
+# would poison the min-reduction), which vertex labels 1..n satisfy.
+MIN_TIMES = Semiring(
+    name="min_times",
+    add=jnp.minimum,
+    mul=jnp.multiply,
+    zero=jnp.inf,
+    one=1.0,
+    dtype=jnp.float32,
+    collective="pmin",
+)
+
+# Triangle counting: ⟨+,∧⟩ over {0,1}⊂ℤ — C = (L ⊕.⊗ Lᵀ) ⊙ L counts, per
+# masked edge, the common in-neighbours of its endpoints (paper §5.1's
+# matrix-matrix workload class). ∧ on {0,1} is min; ⊕-reduce is a plain sum
+# so the count comes out in ℤ.
+PLUS_AND = Semiring(
+    name="plus_and",
+    add=jnp.add,
+    mul=jnp.minimum,
+    zero=0,
+    one=1,
+    dtype=jnp.int32,
+    collective="psum",
+)
+
 SEMIRINGS: dict[str, Semiring] = {
-    s.name: s for s in (BOOL_OR_AND, MIN_PLUS, PLUS_TIMES)
+    s.name: s for s in (BOOL_OR_AND, MIN_PLUS, PLUS_TIMES, MIN_TIMES, PLUS_AND)
 }
 
 

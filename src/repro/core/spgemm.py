@@ -1,0 +1,121 @@
+"""Masked semiring SpGEMM: C = (A ⊕.⊗ B) ⊙ M — the matrix-matrix kernel
+class (paper §5.1's whole-graph workloads; PrIM's GEMV→GEMM regime shift).
+
+SpMV/SpMSpV cover frontier traversals; whole-graph analytics (triangle
+counting, and the distributed merge study in core.distributed) additionally
+need sparse-×-matrix products. Three paths mirror the spmv/spmspv split:
+
+* ``spgemm_sparse_dense`` — element formats (COO/CSR): one [nnz, N] gather
+  of B's rows + a single ⊕-segment-reduce per output row; the realistic
+  CPU/VPU formulation (work ∝ nnz(A)·N).
+* ``spgemm_blocked``      — dense-blocked reference: ⊕-accumulate over
+  K-blocks under `lax.scan` (bounded memory, the oracle for big inputs).
+* PaddedBSR               — the Pallas tiled kernel
+  (kernels/spgemm_tiles.py): only stored A tiles are streamed and output
+  tiles with an empty mask skip compute entirely — GraphBLAS-style masked
+  work-skipping at tile granularity.
+
+The mask ⊙ is *structural* (GraphBLAS semantics): C keeps its value where
+``mask != sr.zero`` and collapses to the ⊕-identity elsewhere. B and the
+mask are dense — every masked-SpGEMM consumer here (triangle counting's
+L·Lᵀ⊙L, k-core's degree filtering) either owns a small dense operand or
+immediately reduces the product.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import COOMatrix, CSRMatrix, PaddedBSR
+from repro.core.semiring import Semiring
+
+Array = jax.Array
+
+
+def apply_mask(c: Array, mask: Array | None, sr: Semiring) -> Array:
+    """Structural mask: keep c where mask is stored (≠ ⊕-identity)."""
+    if mask is None:
+        return c
+    return jnp.where(mask != sr.zero, c, jnp.asarray(sr.zero, c.dtype))
+
+
+def spgemm_dense_ref(a_dense: Array, b_dense: Array, sr: Semiring,
+                     mask: Array | None = None) -> Array:
+    """Row-at-a-time oracle: c_ij = ⊕_k a_ik ⊗ b_kj (`lax.map` keeps the
+    [K, N] broadcast to one live row; pure ground truth for tests)."""
+    b = b_dense.astype(sr.dtype)
+
+    def row(a_i: Array) -> Array:
+        return sr.add_reduce(sr.mul(a_i[:, None], b), axis=0)
+
+    c = jax.lax.map(row, a_dense.astype(sr.dtype))
+    return apply_mask(c, mask, sr)
+
+
+def spgemm_blocked(a_dense: Array, b_dense: Array, sr: Semiring,
+                   mask: Array | None = None, block_k: int = 128) -> Array:
+    """Dense-blocked path: scan over K-blocks, ⊕-accumulating each block's
+    contribution. A-padding uses the ⊕-identity and B-padding the
+    ⊗-identity so padded products annihilate for every exported semiring
+    (zero ⊗ one = zero; one avoids the min_times inf×0 domain hole)."""
+    m, k = a_dense.shape
+    k2, n = b_dense.shape
+    assert k == k2, (a_dense.shape, b_dense.shape)
+    kb = -(-k // block_k)
+    pad = kb * block_k - k
+    a = jnp.pad(a_dense.astype(sr.dtype), ((0, 0), (0, pad)),
+                constant_values=sr.zero)
+    b = jnp.pad(b_dense.astype(sr.dtype), ((0, pad), (0, 0)),
+                constant_values=sr.one)
+    a_blocks = a.reshape(m, kb, block_k).transpose(1, 0, 2)   # [kb, M, bk]
+    b_blocks = b.reshape(kb, block_k, n)                       # [kb, bk, N]
+
+    def step(c, blk):
+        a_blk, b_blk = blk
+        if sr.mxu_eligible:
+            contrib = jnp.dot(a_blk, b_blk,
+                              preferred_element_type=jnp.float32).astype(c.dtype)
+        else:
+            contrib = sr.add_reduce(sr.mul(a_blk[:, :, None], b_blk[None]),
+                                    axis=1)
+        return sr.add(c, contrib), ()
+
+    c0 = jnp.full((m, n), sr.zero, dtype=sr.dtype)
+    c, _ = jax.lax.scan(step, c0, (a_blocks, b_blocks))
+    return apply_mask(c, mask, sr)
+
+
+def spgemm_sparse_dense(a, b_dense: Array, sr: Semiring) -> Array:
+    """Element-format SpGEMM (SpMM): for each stored a_ik, ⊕-scatter
+    a_ik ⊗ B[k, :] into output row i — one [nnz, N] gather + one
+    segment-reduce, the N-column generalization of spmv_coo/csr."""
+    m, k = a.shape
+    seg = a.seg_ids if isinstance(a, CSRMatrix) else a.rows
+    ok = seg < m
+    bk = b_dense[jnp.where(ok, a.cols, 0)].astype(sr.dtype)    # [nnz, N]
+    prod = sr.mul(a.vals.astype(sr.dtype)[:, None], bk)
+    prod = jnp.where(ok[:, None], prod, sr.zero)
+    return sr.segment_reduce(prod, jnp.where(ok, seg, m), m)
+
+
+def spgemm_masked(a, b_dense: Array, sr: Semiring, mask: Array | None = None,
+                  impl: str = "auto") -> Array:
+    """Dispatch on A's container (mirrors core.spmv.spmv):
+
+    COO/CSR     -> spgemm_sparse_dense + mask
+    PaddedBSR   -> Pallas tiled kernel (kernels/spgemm_tiles.py); impl="ref"
+                   selects the jnp oracle
+    dense Array -> spgemm_blocked
+    """
+    if isinstance(a, (COOMatrix, CSRMatrix)):
+        c = spgemm_sparse_dense(a, b_dense, sr)
+        return apply_mask(c, mask, sr)
+    if isinstance(a, PaddedBSR):
+        from repro.kernels import ops  # deferred: kernels import pallas
+
+        if impl == "ref":
+            return ops.semiring_spgemm_ref(a, b_dense, sr, mask=mask)
+        return ops.semiring_spgemm(a, b_dense, sr, mask=mask)
+    if isinstance(a, jax.Array) or hasattr(a, "ndim"):
+        return spgemm_blocked(a, b_dense, sr, mask=mask)
+    raise TypeError(type(a))

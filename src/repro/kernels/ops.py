@@ -14,6 +14,7 @@ from repro.core.semiring import Semiring
 from repro.core.spmspv import Frontier
 from repro.kernels import ref
 from repro.kernels.semiring_spmv import semiring_spmv_padded
+from repro.kernels.spgemm_tiles import semiring_spgemm_padded
 from repro.kernels.spmspv_tiles import semiring_spmspv_padded
 
 Array = jax.Array
@@ -62,6 +63,52 @@ def semiring_spmspv(a: PaddedBSR, f: Frontier, sr: Semiring,
     if pad:
         x_dense = jnp.pad(x_dense, (0, pad), constant_values=sr.zero)
     return semiring_spmspv_padded(a.tiles, meta, x_dense, sr=sr, interpret=itp)
+
+
+def _spgemm_operands(a: PaddedBSR, b: Array, sr: Semiring,
+                     mask: Array | None):
+    """Pad B/mask to the kernel's block grid and build the prefetch meta.
+    B's column pad uses the ⊗-identity (annihilates against ⊕-identity A
+    pad tiles, min_times-safe); the mask pad is the ⊕-identity so padded
+    output columns collapse to zero and slice away cleanly."""
+    bm, bk = a.block
+    m_pad, k_pad = a.shape
+    assert b.shape[0] == k_pad, (b.shape, a.shape)
+    n = b.shape[1]
+    bn = bm  # square output tiles
+    n_pad = -(-n // bn) * bn
+    bp = jnp.pad(b.astype(sr.dtype), ((0, 0), (0, n_pad - n)),
+                 constant_values=sr.one)
+    if mask is None:
+        mk = jnp.full((m_pad, n_pad), sr.one, sr.dtype)
+        mk = mk.at[:, n:].set(sr.zero)
+    else:
+        assert mask.shape == (m_pad, n), (mask.shape, (m_pad, n))
+        mk = jnp.pad(mask.astype(sr.dtype), ((0, 0), (0, n_pad - n)),
+                     constant_values=sr.zero)
+    mb, nb = m_pad // bm, n_pad // bn
+    tile_any = jnp.any(
+        mk.reshape(mb, bm, nb, bn) != sr.zero, axis=(1, 3)).astype(jnp.int32)
+    meta = jnp.concatenate([a.tile_cols, tile_any], axis=1)
+    return bp, mk, meta, bn, n
+
+
+def semiring_spgemm(a: PaddedBSR, b: Array, sr: Semiring,
+                    mask: Array | None = None,
+                    interpret: bool | None = None) -> Array:
+    """C = (A ⊕.⊗ B) ⊙ mask. A in ELL-of-tiles; B dense [a.shape[1], N];
+    mask dense [a.shape[0], N] or None. Output [a.shape[0], N]."""
+    itp = INTERPRET if interpret is None else interpret
+    bp, mk, meta, bn, n = _spgemm_operands(a, b, sr, mask)
+    c = semiring_spgemm_padded(a.tiles, meta, bp, mk, sr=sr, bn=bn,
+                               interpret=itp)
+    return c[:, :n]
+
+
+def semiring_spgemm_ref(a: PaddedBSR, b: Array, sr: Semiring,
+                        mask: Array | None = None) -> Array:
+    bp, mk, meta, bn, n = _spgemm_operands(a, b, sr, mask)
+    return ref.spgemm_padded_ref(a.tiles, a.tile_cols, bp, mk, sr)[:, :n]
 
 
 def moe_dispatch_gather(x: Array, slot_tok: Array, block_d: int = 128,

@@ -41,6 +41,30 @@ def moe_dispatch_gather_ref(x: Array, slot_tok: Array) -> Array:
     return jnp.where(ok[:, None], x[safe], 0).astype(x.dtype)
 
 
+def spgemm_padded_ref(tiles: Array, tile_cols: Array, b: Array, mask: Array,
+                      sr: Semiring) -> Array:
+    """Oracle for semiring_spgemm_padded: per block row, ⊕-accumulate each
+    stored A tile against its B row-block, then apply the structural mask.
+    tiles [mb, T, bm, bk]; tile_cols [mb, T]; b [K, N]; mask [mb*bm, N]."""
+    mb, t, bm, bk = tiles.shape
+    n = b.shape[1]
+    b_blocks = b.reshape(-1, bk, n).astype(sr.dtype)   # [kb, bk, N]
+
+    def row(i):
+        def slot(j, acc):
+            a = tiles[i, j].astype(sr.dtype)           # [bm, bk]
+            bb = b_blocks[tile_cols[i, j]]             # [bk, N]
+            contrib = sr.add_reduce(sr.mul(a[:, :, None], bb[None]), axis=1)
+            return sr.add(acc, contrib)
+
+        acc0 = jnp.full((bm, n), sr.zero, dtype=sr.dtype)
+        return jax.lax.fori_loop(0, t, slot, acc0)
+
+    c = jax.lax.map(row, jnp.arange(mb)).reshape(mb * bm, n)
+    return jnp.where(mask != sr.zero, c, jnp.asarray(sr.zero, sr.dtype)
+                     ).astype(b.dtype)
+
+
 def spmspv_padded_ref(tiles: Array, meta: Array, x: Array, sr: Semiring) -> Array:
     """Oracle for semiring_spmspv_padded. meta [mb, 1+2T] =
     (n_active, slot-perm..., permuted tile-cols...); only the first

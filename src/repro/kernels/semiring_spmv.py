@@ -39,7 +39,7 @@ def _kernel(cols_ref, tiles_ref, x_ref, y_ref, *, sr: Semiring, t_grid: int):
 
     a = tiles_ref[0, 0]          # [bm, bn]
     xb = x_ref[...]              # [bn]
-    if sr.collective == "psum":
+    if sr.mxu_eligible:
         contrib = jnp.dot(a, xb, preferred_element_type=jnp.float32).astype(y_ref.dtype)
     else:
         # VPU path: broadcast ⊗ then ⊕-reduce along the tile column.

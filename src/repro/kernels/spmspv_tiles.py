@@ -45,7 +45,7 @@ def _kernel(meta_ref, tiles_ref, x_ref, y_ref, *, sr: Semiring):
     def _compute():
         a = tiles_ref[0, 0]
         xb = x_ref[...]
-        if sr.collective == "psum":
+        if sr.mxu_eligible:
             contrib = jnp.dot(a, xb, preferred_element_type=jnp.float32).astype(y_ref.dtype)
         else:
             contrib = sr.add_reduce(sr.mul(a, xb[None, :]), axis=1)

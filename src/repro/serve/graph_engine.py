@@ -1,15 +1,26 @@
-"""Multi-query graph traversal server: batches incoming (algorithm, source)
-requests and drains them through the batched engine (graphs/multi.py).
+"""Multi-query graph server: batches (algorithm, source) traversal requests
+through the batched engine (graphs/multi.py) and serves whole-graph
+analytics (graphs/analytics.py) as compute-once global results.
 
 The request-batching idiom mirrors serve/engine.py's ServingEngine: callers
-``submit`` requests, then ``flush`` pads each algorithm's pending sources to
-a fixed batch bucket and runs one jitted multi-source traversal per bucket —
-one compile per (algorithm, bucket), reused forever. Two serving-side
-optimizations ride on top:
+``submit`` requests, then ``flush`` resolves them. Two request kinds share
+the same submit/flush path:
+
+* **traversal** (bfs / sssp / ppr) — per-source queries, padded to fixed
+  batch buckets and run as one jitted multi-source traversal per bucket.
+* **global** (pagerank / cc / triangles / kcore) — source-less whole-graph
+  analytics: the answer is a property of the graph, so it is computed once,
+  cached, and fanned out to every asker (within a flush and across
+  flushes via the LRU).
+
+Serving-side optimizations:
 
 * **dedup** — repeated sources inside a flush compute once and fan out;
-* **LRU result cache** — answers served before (per algorithm+source) skip
-  the engine entirely, bounded by ``cache_capacity``.
+* **LRU result cache** — answers served before skip the engine entirely,
+  bounded by ``cache_capacity``. Keys carry the server's **graph/engine
+  fingerprint** (edge-content hash + engine parameters), so a cache shared
+  by several servers — or kept across an engine rebuild — can never return
+  stale cross-graph results.
 
 A ``mesh`` row-shards each [B, n] traversal block over devices (queries are
 independent), which is how one server saturates an 8-device host.
@@ -17,24 +28,42 @@ independent), which is how one server saturates an 8-device host.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.adaptive import DecisionStump
-from repro.core.semiring import BOOL_OR_AND, MIN_PLUS, PLUS_TIMES
+from repro.core.semiring import BOOL_OR_AND, MIN_PLUS, MIN_TIMES, PLUS_TIMES
+from repro.graphs.analytics import (
+    connected_components, kcore, triangle_count, triangle_reference,
+)
 from repro.graphs.cost_model import trained_stump
 from repro.graphs.datasets import Graph
 from repro.graphs.engine import GraphEngine, build_engine
 from repro.graphs.multi import bfs_multi, ppr_multi, sssp_multi
+from repro.graphs.ppr import pagerank
 
 ALGORITHMS = ("bfs", "sssp", "ppr")
+GLOBAL_ALGORITHMS = ("pagerank", "cc", "triangles", "kcore")
+GLOBAL = -1  # source sentinel for global (whole-graph) requests
+
+
+def graph_fingerprint(graph: Graph) -> str:
+    """Content hash of the graph's edge structure (not its object identity:
+    a rebuilt-but-identical graph hits the same cache entries)."""
+    h = hashlib.sha1()
+    h.update(np.int64(graph.n).tobytes())
+    h.update(np.ascontiguousarray(graph.rows, dtype=np.int64).tobytes())
+    h.update(np.ascontiguousarray(graph.cols, dtype=np.int64).tobytes())
+    return h.hexdigest()[:16]
 
 
 @dataclasses.dataclass
 class GraphRequest:
-    """One traversal query. ``result`` is filled by flush(); ``cached`` marks
+    """One query. Traversal kinds carry a source vertex; global kinds use
+    the GLOBAL sentinel. ``result`` is filled by flush(); ``cached`` marks
     answers served from the LRU instead of the engine."""
 
     algorithm: str
@@ -44,18 +73,20 @@ class GraphRequest:
 
 
 class LRUCache:
-    """Bounded (algorithm, source) -> result-dict map, LRU eviction."""
+    """Bounded (engine_key, algorithm, source) -> result-dict map, LRU
+    eviction. The engine_key component makes the cache safe to share
+    across servers / graphs / rebuilt engines."""
 
     def __init__(self, capacity: int):
         self.capacity = capacity
-        self._d: OrderedDict[Tuple[str, int], Dict[str, Any]] = OrderedDict()
+        self._d: OrderedDict[Tuple[str, str, int], Dict[str, Any]] = OrderedDict()
         self.hits = 0
         self.misses = 0
 
     def __len__(self) -> int:
         return len(self._d)
 
-    def get(self, key: Tuple[str, int]) -> Optional[Dict[str, Any]]:
+    def get(self, key: Tuple[str, str, int]) -> Optional[Dict[str, Any]]:
         if key in self._d:
             self._d.move_to_end(key)
             self.hits += 1
@@ -63,7 +94,7 @@ class LRUCache:
         self.misses += 1
         return None
 
-    def put(self, key: Tuple[str, int], value: Dict[str, Any]) -> None:
+    def put(self, key: Tuple[str, str, int], value: Dict[str, Any]) -> None:
         if self.capacity <= 0:
             return
         self._d[key] = value
@@ -74,13 +105,16 @@ class LRUCache:
 
 class GraphQueryServer:
     """Batching front-end over one graph: build per-semiring engines lazily,
-    queue queries, drain them in fixed-size buckets."""
+    queue queries, drain them in fixed-size buckets (traversal) or as
+    compute-once global results (analytics)."""
 
     def __init__(self, graph: Graph, stump: DecisionStump | None = None,
                  batch_size: int = 8, cache_capacity: int = 1024,
                  max_iters: int = 64, policy: str = "adaptive",
                  alpha: float = 0.85, weight_seed: int = 5,
-                 mesh=None, axis_name: str = "batch"):
+                 mesh=None, axis_name: str = "batch",
+                 cache: LRUCache | None = None,
+                 triangle_dense_limit: int = 8192):
         self.graph = graph
         self.stump = stump or trained_stump()
         self.batch_size = batch_size
@@ -90,15 +124,29 @@ class GraphQueryServer:
         self.weight_seed = weight_seed
         self.mesh = mesh
         self.axis_name = axis_name
-        self.cache = LRUCache(cache_capacity)
+        self.triangle_dense_limit = triangle_dense_limit
+        self.cache = cache if cache is not None else LRUCache(cache_capacity)
+        # Everything that changes answers must be in the cache key: the
+        # graph's edge content plus the engine-shaping parameters — the
+        # stump included, since it moves the adaptive switch point and
+        # with it the kernels' float accumulation order.
+        stump_key = (f"{self.stump.feature}:{self.stump.threshold:g}:"
+                     f"{self.stump.left_class}:{self.stump.right_class}")
+        self.engine_key = (f"{graph_fingerprint(graph)}"
+                           f"/w{weight_seed}/a{alpha}/i{max_iters}/{policy}"
+                           f"/s{stump_key}")
         self._engines: Dict[str, GraphEngine] = {}
         self._queue: List[GraphRequest] = []
         self.stats = {"submitted": 0, "served": 0, "cache_hits": 0,
-                      "deduped": 0, "batches": 0}
+                      "deduped": 0, "batches": 0, "global_runs": 0}
 
     # ------------------------------------------------------------------
     def engine(self, algorithm: str) -> GraphEngine:
-        """The per-algorithm GraphEngine (built on first use)."""
+        """The per-algorithm GraphEngine (built on first use). Global apps
+        reuse the traversal engines where the semiring matches: pagerank
+        shares ppr's normalized ⟨+,×⟩ engine; kcore gets an unnormalized
+        one; cc gets ⟨min,×⟩; triangles is engine-free (SpGEMM on host
+        containers)."""
         if algorithm not in self._engines:
             g, stump = self.graph, self.stump
             if algorithm == "bfs":
@@ -106,21 +154,39 @@ class GraphQueryServer:
             elif algorithm == "sssp":
                 eng = build_engine(g, MIN_PLUS, stump, weighted=True,
                                    seed=self.weight_seed)
-            elif algorithm == "ppr":
+            elif algorithm in ("ppr", "pagerank"):
                 eng = build_engine(g, PLUS_TIMES, stump, normalize=True)
+                self._engines["ppr"] = self._engines["pagerank"] = eng
+                return eng
+            elif algorithm == "cc":
+                eng = build_engine(g, MIN_TIMES, stump)
+            elif algorithm == "kcore":
+                eng = build_engine(g, PLUS_TIMES, stump)
             else:
                 raise ValueError(f"unknown algorithm {algorithm!r}; "
-                                 f"expected one of {ALGORITHMS}")
+                                 f"expected one of "
+                                 f"{ALGORITHMS + GLOBAL_ALGORITHMS}")
             self._engines[algorithm] = eng
         return self._engines[algorithm]
 
-    def submit(self, algorithm: str, source: int) -> GraphRequest:
-        """Enqueue one query; resolution happens at the next flush()."""
-        if algorithm not in ALGORITHMS:
-            raise ValueError(f"unknown algorithm {algorithm!r}")
-        if not 0 <= source < self.graph.n:
-            raise ValueError(f"source {source} out of range [0, {self.graph.n})")
-        req = GraphRequest(algorithm, int(source))
+    def submit(self, algorithm: str, source: int | None = None) -> GraphRequest:
+        """Enqueue one query; resolution happens at the next flush().
+        Traversal kinds require a source vertex; global kinds take none."""
+        if algorithm in GLOBAL_ALGORITHMS:
+            if source is not None:
+                raise ValueError(f"{algorithm!r} is a whole-graph query; "
+                                 f"it takes no source")
+            req = GraphRequest(algorithm, GLOBAL)
+        elif algorithm in ALGORITHMS:
+            if source is None:
+                raise ValueError(f"{algorithm!r} requires a source vertex")
+            if not 0 <= source < self.graph.n:
+                raise ValueError(
+                    f"source {source} out of range [0, {self.graph.n})")
+            req = GraphRequest(algorithm, int(source))
+        else:
+            raise ValueError(f"unknown algorithm {algorithm!r}; expected one "
+                             f"of {ALGORITHMS + GLOBAL_ALGORITHMS}")
         self._queue.append(req)
         self.stats["submitted"] += 1
         return req
@@ -153,20 +219,85 @@ class GraphQueryServer:
             out[s] = payload
         return out
 
+    def _run_global(self, algorithm: str) -> Dict[str, Any]:
+        """One whole-graph analytics run (computed at most once per graph
+        thanks to the LRU; every asker shares the payload)."""
+        self.stats["global_runs"] += 1
+        if algorithm == "pagerank":
+            res = pagerank(self.engine("pagerank"), alpha=self.alpha,
+                           max_iters=self.max_iters)
+            return {"rank": np.asarray(res.rank),
+                    "residual": float(res.residual),
+                    "iterations": int(res.iterations)}
+        if algorithm == "cc":
+            res = connected_components(self.engine("cc"))
+            return {"labels": np.asarray(res.labels),
+                    "n_components": int(res.n_components),
+                    "iterations": int(res.iterations)}
+        if algorithm == "triangles":
+            # The masked-SpGEMM path holds a dense [n, n] Lᵀ operand AND
+            # the CSR kernel's [nnz(L), n] gather/product intermediates —
+            # memory cliffs the serve path must not walk off for big
+            # graphs. triangle_dense_limit² is the element budget for the
+            # larger of the two; beyond it, fall back to the sequential
+            # intersection counter: identical exact answer, work ∝ Σdeg²
+            # (asymptotically less than the SpGEMM path's nnz·n), but a
+            # host-Python loop — like every global kind, it runs on the
+            # flush thread, so big-graph triangle queries are slow-lane.
+            g = self.graph
+            footprint = max(g.n, g.nnz // 2) * g.n
+            if footprint > self.triangle_dense_limit ** 2:
+                total = triangle_reference(g.rows, g.cols, g.n)
+            else:
+                total = int(triangle_count(g).total)
+            return {"total": total, "iterations": 1}
+        res = kcore(self.engine("kcore"))
+        return {"coreness": np.asarray(res.coreness),
+                "max_core": int(res.max_core),
+                "iterations": int(res.iterations)}
+
     def flush(self) -> List[GraphRequest]:
-        """Resolve every queued request: cache -> dedup -> padded batches.
-        Returns the requests in submission order, results attached."""
+        """Resolve every queued request: cache -> dedup -> padded batches
+        (traversal) / one shared run (global). Returns the requests in
+        submission order, results attached."""
         queue, self._queue = self._queue, []
         by_alg: Dict[str, List[GraphRequest]] = {}
         for req in queue:
             by_alg.setdefault(req.algorithm, []).append(req)
 
         for algorithm, reqs in by_alg.items():
+            if algorithm in GLOBAL_ALGORITHMS:
+                # Probe the LRU once per request, exactly like the
+                # traversal path, so stats["cache_hits"] and
+                # LRUCache.hits stay reconcilable across query kinds.
+                # The first miss computes once into a flush-local payload;
+                # fan-out askers resolve from the LRU when it accepted the
+                # put, and from the local payload (counted as dedup, like
+                # the traversal path) when caching is disabled/evicting —
+                # the compute-once contract never depends on the cache.
+                key = (self.engine_key, algorithm, GLOBAL)
+                fresh = None
+                for req in reqs:
+                    hit = self.cache.get(key)
+                    if hit is not None:
+                        # shallow copy: numpy payloads stay shared (read-only)
+                        req.result = dict(hit)
+                        req.cached = True
+                        self.stats["cache_hits"] += 1
+                    elif fresh is not None:
+                        req.result = dict(fresh)
+                        self.stats["deduped"] += 1
+                    else:
+                        fresh = self._run_global(algorithm)
+                        self.cache.put(key, fresh)
+                        req.result = dict(fresh)
+                continue
+
             fresh: Dict[int, Dict[str, Any]] = {}
             misses: List[int] = []
             seen = set()
             for req in reqs:
-                hit = self.cache.get((algorithm, req.source))
+                hit = self.cache.get((self.engine_key, algorithm, req.source))
                 if hit is not None:
                     # shallow copy: the dict is per-request, the numpy
                     # payloads stay shared (treat them as read-only)
@@ -182,7 +313,7 @@ class GraphQueryServer:
                 chunk = misses[lo: lo + self.batch_size]
                 fresh.update(self._run_batch(algorithm, chunk))
             for src, payload in fresh.items():
-                self.cache.put((algorithm, src), payload)
+                self.cache.put((self.engine_key, algorithm, src), payload)
             for req in reqs:
                 if req.result is None:
                     req.result = dict(fresh[req.source])

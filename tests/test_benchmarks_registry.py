@@ -1,0 +1,44 @@
+"""The suite runner (benchmarks/run.py) must register every benchmark
+module that exposes a ``run(quick=...)`` entrypoint — regression for the
+ISSUE-2 satellite (multi_query / analytics were at risk of being left out
+of `python -m benchmarks.run`)."""
+import os
+import pathlib
+import re
+import sys
+
+import jax  # noqa: F401  (import first: benchmarks.common must not repin devices)
+
+BENCH_DIR = pathlib.Path(__file__).resolve().parent.parent / "benchmarks"
+
+
+def _modules_list():
+    sys.path.insert(0, str(BENCH_DIR.parent))
+    try:
+        from benchmarks.run import MODULES
+    finally:
+        sys.path.pop(0)
+    return MODULES
+
+
+def test_every_runnable_module_is_registered():
+    modules = _modules_list()
+    runnable = sorted(
+        p.stem for p in BENCH_DIR.glob("*.py")
+        if re.search(r"^def run\(", p.read_text(), re.M))
+    assert sorted(modules) == runnable
+    for name in ("multi_query", "analytics", "table4_apps"):
+        assert name in modules
+
+
+def test_registered_modules_exist():
+    for name in _modules_list():
+        assert (BENCH_DIR / f"{name}.py").is_file(), name
+
+
+def test_devices_not_repinned():
+    """Importing the registry must never mutate this process's XLA flags
+    (benchmarks.common only pins devices when jax is not yet imported)."""
+    before = os.environ.get("XLA_FLAGS")
+    _modules_list()
+    assert os.environ.get("XLA_FLAGS") == before

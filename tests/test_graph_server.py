@@ -1,9 +1,12 @@
-"""GraphQueryServer: batching, source dedup, LRU caching, and answer
-fidelity against the single-source apps (serve/graph_engine.py)."""
+"""GraphQueryServer: batching, source dedup, LRU caching, global
+(whole-graph) request kinds, graph-keyed cache safety, and answer fidelity
+against the single-source apps (serve/graph_engine.py)."""
 import numpy as np
 import pytest
 
 from repro.graphs import bfs, generate, ppr, sssp
+from repro.graphs.analytics import connected_components, kcore, triangle_count
+from repro.graphs.ppr import pagerank
 from repro.serve.graph_engine import GraphQueryServer, LRUCache
 
 
@@ -84,6 +87,131 @@ def test_lru_eviction_bound():
     c.get(("bfs", 2))
     c.put(("bfs", 4), {"a": 4})
     assert c.get(("bfs", 2)) is not None and c.get(("bfs", 3)) is None
+
+
+def test_global_queries_match_apps(server, graph):
+    """Whole-graph kinds ride the same submit/flush path and agree with
+    direct app calls."""
+    reqs = {alg: server.submit(alg)
+            for alg in ("cc", "pagerank", "triangles", "kcore")}
+    reqs["bfs"] = server.submit("bfs", 0)   # mixed flush
+    done = server.flush()
+    assert len(done) == 5 and all(r.result is not None for r in done)
+
+    ref_cc = connected_components(server.engine("cc"))
+    np.testing.assert_array_equal(reqs["cc"].result["labels"],
+                                  np.asarray(ref_cc.labels))
+    assert reqs["cc"].result["n_components"] == int(ref_cc.n_components)
+
+    ref_pr = pagerank(server.engine("pagerank"), alpha=server.alpha,
+                      max_iters=server.max_iters)
+    np.testing.assert_allclose(reqs["pagerank"].result["rank"],
+                               np.asarray(ref_pr.rank), rtol=1e-5, atol=1e-8)
+
+    assert reqs["triangles"].result["total"] == int(triangle_count(graph).total)
+
+    ref_kc = kcore(server.engine("kcore"))
+    np.testing.assert_array_equal(reqs["kcore"].result["coreness"],
+                                  np.asarray(ref_kc.coreness))
+
+
+def test_global_computed_once_and_fanned_out(server, graph):
+    """N askers in one flush share one run; the first miss computes and
+    caches, the rest resolve as ordinary LRU hits (per-request probing, so
+    stats['cache_hits'] reconciles with LRUCache.hits across query kinds)."""
+    reqs = [server.submit("cc") for _ in range(3)]
+    server.flush()
+    assert server.stats["global_runs"] == 1
+    assert not reqs[0].cached and reqs[1].cached and reqs[2].cached
+    assert server.stats["cache_hits"] == 2 == server.cache.hits
+    for r in reqs[1:]:
+        np.testing.assert_array_equal(r.result["labels"],
+                                      reqs[0].result["labels"])
+    r4 = server.submit("cc")
+    server.flush()
+    assert r4.cached and server.stats["global_runs"] == 1
+    assert server.stats["cache_hits"] == 3 == server.cache.hits
+    np.testing.assert_array_equal(r4.result["labels"],
+                                  reqs[0].result["labels"])
+
+
+def test_global_compute_once_with_caching_disabled(graph):
+    """The compute-once contract must not depend on the LRU accepting
+    puts: with cache_capacity=0, N askers in one flush still share one
+    run (counted as dedup, like the traversal path)."""
+    srv = GraphQueryServer(graph, cache_capacity=0)
+    reqs = [srv.submit("cc") for _ in range(4)]
+    srv.flush()
+    assert srv.stats["global_runs"] == 1
+    assert srv.stats["deduped"] == 3 and srv.stats["cache_hits"] == 0
+    for r in reqs[1:]:
+        np.testing.assert_array_equal(r.result["labels"],
+                                      reqs[0].result["labels"])
+
+
+def test_triangles_dense_limit_fallback(graph):
+    """Above triangle_dense_limit the server answers triangles via the
+    nnz-scaled sequential counter instead of the dense-operand SpGEMM —
+    same exact total, no O(n²) allocation on the serve path."""
+    srv = GraphQueryServer(graph, triangle_dense_limit=1)
+    req = srv.submit("triangles")
+    srv.flush()
+    assert req.result["total"] == int(triangle_count(graph).total)
+
+
+def test_global_submit_validation(server):
+    with pytest.raises(ValueError):
+        server.submit("cc", 0)        # global kinds take no source
+    with pytest.raises(ValueError):
+        server.submit("triangles", 3)
+
+
+def test_shared_cache_keys_by_graph_identity(graph):
+    """Regression (ISSUE 2 satellite): one cache serving two graphs (or a
+    rebuilt engine) must never return stale cross-graph results."""
+    shared = LRUCache(128)
+    other = generate("face", scale=0.15, seed=7)   # same sizes, new edges
+    s1 = GraphQueryServer(graph, batch_size=4, cache=shared)
+    s2 = GraphQueryServer(other, batch_size=4, cache=shared)
+    assert s1.engine_key != s2.engine_key
+
+    a = s1.submit("bfs", 3)
+    s1.flush()
+    b = s2.submit("bfs", 3)
+    s2.flush()
+    assert not b.cached                      # miss: different graph content
+    ref = bfs(s2.engine("bfs"), 3)
+    np.testing.assert_array_equal(b.result["levels"], np.asarray(ref.levels))
+
+    t1 = s1.submit("triangles"); s1.flush()
+    t2 = s2.submit("triangles"); s2.flush()
+    assert not t2.cached
+    assert t2.result["total"] == int(triangle_count(other).total)
+
+    # same edge content in a rebuilt Graph object -> cache HIT (fingerprint
+    # is content-addressed, not object identity)
+    rebuilt = generate("face", scale=0.15, seed=1)
+    s3 = GraphQueryServer(rebuilt, batch_size=4, cache=shared)
+    assert s3.engine_key == s1.engine_key
+    c = s3.submit("bfs", 3)
+    s3.flush()
+    assert c.cached
+    np.testing.assert_array_equal(c.result["levels"], a.result["levels"])
+
+
+def test_engine_param_changes_miss_cache(graph):
+    """A server with different engine parameters (weight seed) must not
+    reuse another's SSSP distances."""
+    shared = LRUCache(128)
+    s1 = GraphQueryServer(graph, batch_size=4, cache=shared, weight_seed=5)
+    s2 = GraphQueryServer(graph, batch_size=4, cache=shared, weight_seed=6)
+    a = s1.submit("sssp", 1); s1.flush()
+    b = s2.submit("sssp", 1); s2.flush()
+    assert not b.cached
+    ref = sssp(s2.engine("sssp"), 1)
+    np.testing.assert_allclose(b.result["dist"], np.asarray(ref.dist),
+                               rtol=1e-6)
+    assert a.result is not b.result
 
 
 def test_mixed_algorithms_one_flush(server, graph):

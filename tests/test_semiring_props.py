@@ -1,0 +1,72 @@
+"""Hypothesis property suites: semiring axioms for every exported semiring
+(including the analytics additions ⟨min,×⟩ / ⟨+,∧⟩) and masked-SpGEMM
+triangle totals vs a brute-force counter on small random graphs."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.semiring import SEMIRINGS
+from repro.graphs.analytics import triangle_count
+from repro.graphs.datasets import Graph, _symmetrize
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+
+def _domain(sr):
+    """Element strategy inside the semiring's documented domain."""
+    if sr.dtype == jnp.int32:
+        return st.integers(min_value=0, max_value=1)   # {0,1} lattices
+    if sr.name == "min_times":                          # strictly positive
+        return st.one_of(st.floats(0.5, 64.0, width=32), st.just(np.inf))
+    if sr.name == "min_plus":
+        return st.one_of(st.floats(-64.0, 64.0, width=32), st.just(np.inf))
+    return st.floats(-64.0, 64.0, width=32)             # plus_times
+
+
+@pytest.mark.parametrize("sr", list(SEMIRINGS.values()),
+                         ids=list(SEMIRINGS.keys()))
+def test_semiring_axioms(sr):
+    """⊕ associativity/commutativity and identity, ⊗ identity, and
+    zero-annihilation, for every exported semiring over its domain."""
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.tuples(_domain(sr), _domain(sr), _domain(sr)))
+    def check(xyz):
+        x, y, z = (np.dtype(sr.dtype).type(v) for v in xyz)
+        add, mul = sr.add, sr.mul
+        lhs = np.asarray(add(add(x, y), z))
+        rhs = np.asarray(add(x, add(y, z)))
+        if sr.name == "plus_times":   # float + is only approximately assoc.
+            np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)
+        else:
+            np.testing.assert_array_equal(lhs, rhs)
+        np.testing.assert_array_equal(np.asarray(add(x, y)),
+                                      np.asarray(add(y, x)))
+        one = np.dtype(sr.dtype).type(sr.one)
+        zero = np.dtype(sr.dtype).type(sr.zero)
+        np.testing.assert_array_equal(np.asarray(mul(x, one)), x)
+        np.testing.assert_array_equal(np.asarray(mul(one, x)), x)
+        np.testing.assert_array_equal(np.asarray(mul(x, zero)), zero)
+        np.testing.assert_array_equal(np.asarray(mul(zero, x)), zero)
+        np.testing.assert_array_equal(np.asarray(add(x, zero)), x)
+
+    check()
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(4, 20), st.integers(0, 10_000))
+def test_triangle_count_matches_brute_force(n, seed):
+    """Masked-SpGEMM triangle totals equal the O(n³) brute-force count on
+    small random symmetric graphs."""
+    rng = np.random.default_rng(seed)
+    mask = np.triu(rng.random((n, n)) < 0.35, k=1)
+    rows, cols = np.nonzero(mask)
+    r, c = _symmetrize(rows.astype(np.int32), cols.astype(np.int32), n)
+    g = Graph(r, c, n, "rand")
+    adj = np.zeros((n, n), bool)
+    adj[g.rows, g.cols] = True
+    brute = sum(
+        bool(adj[i, j] and adj[j, k] and adj[i, k])
+        for i in range(n) for j in range(i + 1, n) for k in range(j + 1, n))
+    assert int(triangle_count(g, impl="csr").total) == brute
