@@ -1,125 +1,40 @@
-"""Per-phase (Load / Kernel / Retrieve+Merge) closures for the distributed
-engine — the paper's four-phase accounting (Figs 2, 5, 6, 8).
+"""Per-phase (Load / Kernel / Retrieve+Merge) accounting for the
+distributed engine — the paper's four-phase breakdown (Figs 2, 5, 6, 8).
 
-Each phase is its own jitted shard_map so it can be timed in isolation; the
-e2e closure is the production `make_distributed_matvec` path.
+The phase closures themselves live in ``repro.core.distributed
+.build_phase_fns`` (the vocabulary's single definition point); this module
+times them under the paper's *blocking* schedule — a hard sync after every
+phase — which is exactly what UPMEM's blocking DMA enforces in hardware.
+``benchmarks/pipeline_overlap.py`` measures the same closures under the
+non-blocking schedule (core.pipeline) and reports the gap.
+
+``run(quick=...)`` emits the per-phase timings as metric rows so the CI
+artifact carries the Fig-2/5/6/8-style accounting (`python -m
+benchmarks.run --json`); the fig* modules import the helpers below for
+their own sweeps.
 """
 from __future__ import annotations
+
+from benchmarks import common  # noqa: F401  (pins device count first)
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.distributed import (
-    _local_matvec, _op_reduce_scatter, make_distributed_matvec,
-    vec_to_2d_layout,
-)
+from repro.core.distributed import build_phase_fns  # noqa: F401  (re-export)
 from repro.core.partition import PartitionedMatrix, partition
 from repro.core.semiring import Semiring
 
 
-def build_phase_fns(mesh: Mesh, pm: PartitionedMatrix, sr: Semiring,
-                    strategy: str, kernel: str, f_local: int | None = None):
-    """dict of jitted fns keyed by phase; each takes the same (parts, xs).
-    ``f_local`` switches SpMSpV to the paper's compressed Load (the frontier
-    crosses the fabric instead of the dense vector)."""
-    ar, ac = "dr", "dc"
-    flat = (ar, ac)
-    d = pm.n_devices
-    a_specs = jax.tree.map(lambda _: P(flat), pm.parts)
-    strip = lambda t: jax.tree.map(lambda x: x[0], t)
-    fns = {}
-
-    if strategy == "row":
-        load = shard_map(
-            lambda x: jax.lax.all_gather(x, flat, tiled=True).reshape(-1)[None],
-            mesh=mesh, in_specs=P(flat), out_specs=P(flat), check_rep=False)
-
-        def kern(parts, x_full):
-            return _local_matvec(strip(parts), x_full[0], sr, kernel, "auto")[None]
-
-        kern_sm = shard_map(kern, mesh=mesh, in_specs=(a_specs, P(flat)),
-                            out_specs=P(flat), check_rep=False)
-        fns["load"] = jax.jit(lambda parts, xs: load(xs))
-        fns["kernel"] = jax.jit(
-            lambda parts, xs, xf: kern_sm(parts, xf))
-        fns["retrieve_merge"] = None        # row-wise: output stays sharded
-
-    elif strategy == "col":
-        def kern(parts, x):
-            return _local_matvec(strip(parts), x[0], sr, kernel, "auto")[None]
-
-        kern_sm = shard_map(kern, mesh=mesh, in_specs=(a_specs, P(flat)),
-                            out_specs=P(flat), check_rep=False)
-        rm = shard_map(
-            lambda y: _op_reduce_scatter(y[0], sr, flat, d)[None],
-            mesh=mesh, in_specs=P(flat), out_specs=P(flat), check_rep=False)
-        fns["load"] = None                  # input already sharded
-        fns["kernel"] = jax.jit(lambda parts, xs, _xf: kern_sm(parts, xs))
-        fns["retrieve_merge"] = jax.jit(lambda parts, ys: rm(ys))
-
-    elif strategy == "2d":
-        r_parts, c_parts = pm.grid
-        reshape_parts = lambda parts: jax.tree.map(
-            lambda v: v.reshape((r_parts, c_parts) + v.shape[1:]), parts)
-        a2 = jax.tree.map(lambda _: P((ar,), (ac,)), pm.parts)
-
-        load = shard_map(
-            lambda x: jax.lax.all_gather(x[0, 0], ar, tiled=True)[None, None],
-            mesh=mesh, in_specs=P(ar, ac), out_specs=P(ar, ac), check_rep=False)
-
-        def kern(parts, xc):
-            a_local = strip(strip(parts))
-            return _local_matvec(a_local, xc[0, 0], sr, kernel, "auto")[None, None]
-
-        kern_sm = shard_map(kern, mesh=mesh, in_specs=(a2, P(ar, ac)),
-                            out_specs=P(ar, ac), check_rep=False)
-        rm = shard_map(
-            lambda y: _op_reduce_scatter(y[0, 0], sr, ac, c_parts)[None, None],
-            mesh=mesh, in_specs=P(ar, ac), out_specs=P(ar, ac), check_rep=False)
-
-        fns["load"] = jax.jit(
-            lambda parts, xs: load(vec_to_2d_layout(xs, pm.grid)))
-        fns["kernel"] = jax.jit(
-            lambda parts, xs, xf: kern_sm(reshape_parts(parts), xf))
-        fns["retrieve_merge"] = jax.jit(lambda parts, ys: rm(ys))
-    else:
-        raise ValueError(strategy)
-
-    fns["e2e"] = jax.jit(make_distributed_matvec(mesh, pm, sr, strategy,
-                                                 kernel=kernel,
-                                                 f_local=f_local))
-    if f_local is not None and strategy in ("row", "2d"):
-        # compressed Load: time the per-shard compress + frontier gather
-        from repro.core.distributed import gather_frontier
-        axis = flat if strategy == "row" else ar
-
-        def c_load(x):
-            f = gather_frontier(x[0] if strategy == "row" else x[0, 0],
-                                sr, f_local, axis)
-            lead = ((None,) if strategy == "row" else (None, None))
-            idx = f.indices[lead]
-            val = f.values[lead]
-            return idx, val
-
-        spec = P(flat) if strategy == "row" else P(ar, ac)
-
-        def pre(xs):
-            return xs if strategy == "row" else vec_to_2d_layout(xs, pm.grid)
-
-        loader = shard_map(c_load, mesh=mesh, in_specs=spec,
-                           out_specs=(spec, spec), check_rep=False)
-        fns["load"] = jax.jit(lambda parts, xs: loader(pre(xs)))
-        fns["kernel"] = None          # folded into e2e - load (derived)
-    return fns
-
-
 def phase_times(mesh, pm, sr, strategy, kernel, xs, timeit,
-                f_local: int | None = None):
-    """Measure Load / Kernel / Retrieve+Merge / e2e (seconds)."""
-    fns = build_phase_fns(mesh, pm, sr, strategy, kernel, f_local=f_local)
+                f_local: int | None = None, fns=None):
+    """Measure Load / Kernel / Retrieve+Merge / e2e (seconds), each phase
+    timed in isolation with a blocking sync (the paper's DMA schedule).
+    Pass prebuilt ``fns`` (an undonated build_phase_fns dict) to reuse
+    compiled closures across measurements — phases are re-timed against
+    the same inputs, so donated buffers must NOT be enabled here."""
+    if fns is None:
+        fns = build_phase_fns(mesh, pm, sr, strategy, kernel, f_local=f_local)
     out = {}
     xf = None
     if fns["load"] is not None:
@@ -162,3 +77,42 @@ def shard_x(x_np: np.ndarray, pm: PartitionedMatrix, sr: Semiring):
     xp = np.full(n_pad, fill, dtype=np.asarray(x_np).dtype)
     xp[: x_np.shape[0]] = x_np
     return jnp.asarray(xp.reshape(pm.n_devices, -1), sr.dtype)
+
+
+STRATEGIES = [("row", (8, 1), "csr", "spmv"),
+              ("col", (1, 8), "csc", "spmspv"),
+              ("2d", (2, 4), "csc", "spmspv")]
+
+
+def run(quick: bool = False):
+    """Emit per-phase timing rows per Table-2 family x Fig-3 strategy x
+    traversal semiring — the paper-figure accounting as --json metrics."""
+    from benchmarks.common import emit, make_dense_vector, timeit
+    from repro.core.semiring import BOOL_OR_AND, MIN_PLUS, PLUS_TIMES
+    from repro.graphs.datasets import generate
+
+    mesh = jax.make_mesh((2, 4), ("dr", "dc"))
+    families = ["face"] if quick else ["face", "p2p-24"]
+    algos = [("bfs", BOOL_OR_AND, 0.3), ("sssp", MIN_PLUS, 0.3),
+             ("ppr", PLUS_TIMES, 1.0)]
+    for fam in families:
+        g = generate(fam, scale=0.1 if quick else 0.2, seed=0)
+        for name, sr, dens in algos:
+            x = np.asarray(make_dense_vector(g.n, dens, sr, seed=1))
+            for strategy, grid, fmt, kern in STRATEGIES:
+                pm = prep(g, sr, grid, fmt,
+                          weighted=(sr.name == "min_plus"),
+                          normalize=(sr.name == "plus_times"))
+                t = phase_times(mesh, pm, sr, strategy, kern,
+                                shard_x(x, pm, sr), timeit)
+                emit("phases", f"{fam}/{name}/{strategy}",
+                     load_ms=t["load"] * 1e3, kernel_ms=t["kernel"] * 1e3,
+                     retrieve_merge_ms=t["retrieve_merge"] * 1e3,
+                     e2e_ms=t["e2e"] * 1e3)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(quick=ap.parse_args().quick)

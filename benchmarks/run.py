@@ -22,6 +22,8 @@ MODULES = [
     "fig6_spmv_vs_spmspv",
     "fig7_adaptive_e2e",
     "fig8_scaling",
+    "phases",
+    "pipeline_overlap",
     "table4_apps",
     "multi_query",
     "analytics",

@@ -1,0 +1,71 @@
+"""Pipelined multi-query serving: overlap bucket compute with result
+materialisation.
+
+The flush of a GraphQueryServer drains traversal misses in fixed-size
+buckets. With ``pipeline_depth > 0`` the server dispatches bucket t+1's
+jitted traversal while bucket t's payloads are pulled to host
+(graphs/multi.py:traverse_multi_buckets over core/pipeline.py) — the
+serving-layer analogue of the paper's non-blocking-DMA recommendation.
+Results are bit-identical to the sequential drain; only wall time moves.
+
+    PYTHONPATH=src:. python examples/pipelined_serving.py
+"""
+import os
+import time
+
+if "jax" not in __import__("sys").modules:
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+
+from repro.graphs.datasets import generate
+from repro.serve.graph_engine import GraphQueryServer
+
+
+def timed_flood(server, sources):
+    """One flush wall time for a 3-algorithm query flood (caching is
+    disabled, so every call re-runs the engine)."""
+    for alg in ("bfs", "sssp", "ppr"):
+        for s in sources:
+            server.submit(alg, int(s))
+    t0 = time.perf_counter()
+    done = server.flush()
+    return done, time.perf_counter() - t0
+
+
+def main():
+    g = generate("face", scale=0.5, seed=0)
+    rng = np.random.default_rng(11)
+    sources = rng.integers(0, g.n, 32)
+
+    # two servers over the same graph: blocking drain vs pipelined drain
+    seq = GraphQueryServer(g, batch_size=8, cache_capacity=0,
+                           pipeline_depth=0)
+    pip = GraphQueryServer(g, batch_size=8, cache_capacity=0,
+                           pipeline_depth=2)
+    print(f"graph n={g.n} nnz={g.nnz}; 3 algorithms x {len(sources)} "
+          f"sources, batch=8")
+
+    # warm both servers (compile the runners outside the timed region),
+    # then interleave reps so machine drift hits both drains equally
+    timed_flood(seq, sources[:8])
+    timed_flood(pip, sources[:8])
+    t_seq = t_pip = float("inf")
+    for _ in range(3):
+        done_seq, t = timed_flood(seq, sources)
+        t_seq = min(t_seq, t)
+        done_pip, t = timed_flood(pip, sources)
+        t_pip = min(t_pip, t)
+    for a, b in zip(done_seq, done_pip):
+        for key, val in a.result.items():
+            np.testing.assert_array_equal(np.asarray(val),
+                                          np.asarray(b.result[key]))
+    print(f"sequential drain (depth=0): {t_seq * 1e3:8.1f} ms")
+    print(f"pipelined drain  (depth=2): {t_pip * 1e3:8.1f} ms "
+          f"({t_seq / t_pip:.2f}x)")
+    print(f"results bit-identical across {len(done_seq)} queries")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,3 +23,6 @@ from repro.core.adaptive import (  # noqa: F401
     fit_decision_stump, select_kernel_batch,
 )
 from repro.core.partition import PartitionedMatrix, partition, shard_vector  # noqa: F401
+from repro.core.pipeline import (  # noqa: F401
+    iterate_phases, pipeline_buckets, run_phases_once,
+)

@@ -17,9 +17,20 @@ Strategies (paper Fig. 3):
             (x is sharded over axis_c, replicated over axis_r after gather);
             Retrieve+Merge = ⊕-reduce-scatter over axis_c.
 
-Between traversal iterations, ``reshard_y_to_x`` converts the output layout
-into the next iteration's input layout — the paper's inter-iteration
+Between traversal iterations, ``vec_to_2d_layout`` converts the output
+layout into the next iteration's input layout — the paper's inter-iteration
 retrieve+reload through the host CPU, which on TPU is a collective permute.
+
+This module is the **single definition point** for the four-phase
+vocabulary above; other modules (core.pipeline, serve.graph_engine, the
+benchmarks) cross-reference it instead of re-explaining the phases.
+``build_phase_fns`` exposes each phase as its own jitted closure. The
+closures are *non-blocking by construction* (JAX dispatch is async): the
+caller chooses the schedule. ``benchmarks.phases`` times them with a hard
+sync after every phase — the paper's blocking-DMA schedule — while
+``core.pipeline.iterate_phases`` dispatches them back-to-back so
+Retrieve+Merge of iteration *t* overlaps the Load of *t+1*, the paper's
+proposed non-blocking fix.
 """
 from __future__ import annotations
 
@@ -394,6 +405,131 @@ def make_distributed_spgemm(
         return fn_body(parts, b, mask)
 
     return fn
+
+
+def build_phase_fns(mesh: Mesh, pm: PartitionedMatrix, sr: Semiring,
+                    strategy: str, kernel: str, f_local: int | None = None,
+                    donate: bool = False):
+    """Per-phase jitted closures for one Fig.-3 strategy (see the module
+    docstring for the phase vocabulary). Returns a dict:
+
+        load           : (parts, xs) -> gathered input   (None: no Load)
+        kernel         : (parts, xs, xf) -> partials     (None: only fused)
+        retrieve_merge : (parts, ys) -> merged output    (None: no R+M)
+        feedback       : ys -> xs-layout output          (None: identity)
+        e2e            : (parts, xs) -> output, the production
+                         make_distributed_matvec path in one program
+
+    Every closure dispatches asynchronously; schedule (blocking vs
+    pipelined) is the caller's choice — see core.pipeline. ``feedback``
+    converts the Retrieve+Merge output back into the canonical input
+    layout so iterative algorithms can chain calls (only the 2d strategy
+    needs a real permute). ``f_local`` switches SpMSpV to the paper's
+    compressed Load (the frontier crosses the fabric instead of the dense
+    vector; see gather_frontier). ``donate=True`` additionally donates the
+    Retrieve+Merge input buffer — the kernel's partials are consumed
+    exactly once, so the merge may reuse them in place (the paper's DMA
+    double-buffer); ignored on backends without donation support (CPU).
+    With donation enabled, never call ``retrieve_merge`` twice on the same
+    partials (repeated timing does exactly that — benchmarks.phases times
+    undonated closures for this reason).
+    """
+    ar, ac = "dr", "dc"
+    flat = (ar, ac)
+    d = pm.n_devices
+    a_specs = jax.tree.map(lambda _: P(flat), pm.parts)
+    strip = lambda t: jax.tree.map(lambda x: x[0], t)  # noqa: E731
+    rm_jit_kwargs = {}
+    if donate and jax.default_backend() in ("gpu", "tpu"):
+        rm_jit_kwargs["donate_argnums"] = (1,)
+    fns = {"feedback": None}
+
+    if strategy == "row":
+        load = shard_map(
+            lambda x: jax.lax.all_gather(x, flat, tiled=True).reshape(-1)[None],
+            mesh=mesh, in_specs=P(flat), out_specs=P(flat), check_rep=False)
+
+        def kern(parts, x_full):
+            return _local_matvec(strip(parts), x_full[0], sr, kernel, "auto")[None]
+
+        kern_sm = shard_map(kern, mesh=mesh, in_specs=(a_specs, P(flat)),
+                            out_specs=P(flat), check_rep=False)
+        fns["load"] = jax.jit(lambda parts, xs: load(xs))
+        fns["kernel"] = jax.jit(
+            lambda parts, xs, xf: kern_sm(parts, xf))
+        fns["retrieve_merge"] = None        # row-wise: output stays sharded
+
+    elif strategy == "col":
+        def kern(parts, x):
+            return _local_matvec(strip(parts), x[0], sr, kernel, "auto")[None]
+
+        kern_sm = shard_map(kern, mesh=mesh, in_specs=(a_specs, P(flat)),
+                            out_specs=P(flat), check_rep=False)
+        rm = shard_map(
+            lambda y: _op_reduce_scatter(y[0], sr, flat, d)[None],
+            mesh=mesh, in_specs=P(flat), out_specs=P(flat), check_rep=False)
+        fns["load"] = None                  # input already sharded
+        fns["kernel"] = jax.jit(lambda parts, xs, _xf: kern_sm(parts, xs))
+        fns["retrieve_merge"] = jax.jit(lambda parts, ys: rm(ys),
+                                        **rm_jit_kwargs)
+
+    elif strategy == "2d":
+        r_parts, c_parts = pm.grid
+        reshape_parts = lambda parts: jax.tree.map(  # noqa: E731
+            lambda v: v.reshape((r_parts, c_parts) + v.shape[1:]), parts)
+        a2 = jax.tree.map(lambda _: P((ar,), (ac,)), pm.parts)
+
+        load = shard_map(
+            lambda x: jax.lax.all_gather(x[0, 0], ar, tiled=True)[None, None],
+            mesh=mesh, in_specs=P(ar, ac), out_specs=P(ar, ac), check_rep=False)
+
+        def kern(parts, xc):
+            a_local = strip(strip(parts))
+            return _local_matvec(a_local, xc[0, 0], sr, kernel, "auto")[None, None]
+
+        kern_sm = shard_map(kern, mesh=mesh, in_specs=(a2, P(ar, ac)),
+                            out_specs=P(ar, ac), check_rep=False)
+        rm = shard_map(
+            lambda y: _op_reduce_scatter(y[0, 0], sr, ac, c_parts)[None, None],
+            mesh=mesh, in_specs=P(ar, ac), out_specs=P(ar, ac), check_rep=False)
+
+        fns["load"] = jax.jit(
+            lambda parts, xs: load(vec_to_2d_layout(xs, pm.grid)))
+        fns["kernel"] = jax.jit(
+            lambda parts, xs, xf: kern_sm(reshape_parts(parts), xf))
+        fns["retrieve_merge"] = jax.jit(lambda parts, ys: rm(ys),
+                                        **rm_jit_kwargs)
+        # R+M lands chunks row-major ([r, c] = chunk r*C + c); flattening
+        # restores the canonical layout the Load expects next iteration.
+        fns["feedback"] = jax.jit(lambda ys: ys.reshape(d, -1))
+    else:
+        raise ValueError(strategy)
+
+    fns["e2e"] = jax.jit(make_distributed_matvec(mesh, pm, sr, strategy,
+                                                 kernel=kernel,
+                                                 f_local=f_local))
+    if f_local is not None and strategy in ("row", "2d"):
+        # compressed Load: time the per-shard compress + frontier gather
+        axis = flat if strategy == "row" else ar
+
+        def c_load(x):
+            f = gather_frontier(x[0] if strategy == "row" else x[0, 0],
+                                sr, f_local, axis)
+            lead = ((None,) if strategy == "row" else (None, None))
+            idx = f.indices[lead]
+            val = f.values[lead]
+            return idx, val
+
+        spec = P(flat) if strategy == "row" else P(ar, ac)
+
+        def pre(xs):
+            return xs if strategy == "row" else vec_to_2d_layout(xs, pm.grid)
+
+        loader = shard_map(c_load, mesh=mesh, in_specs=spec,
+                           out_specs=(spec, spec), check_rep=False)
+        fns["load"] = jax.jit(lambda parts, xs: loader(pre(xs)))
+        fns["kernel"] = None          # folded into e2e - load (derived)
+    return fns
 
 
 def vec_to_2d_layout(x: Array, grid) -> Array:

@@ -15,6 +15,7 @@ from repro.graphs.engine import GraphEngine, build_engine  # noqa: F401
 from repro.graphs.multi import (  # noqa: F401
     BFSBatchResult, PPRBatchResult, SSSPBatchResult, bfs_multi,
     make_bfs_multi, make_ppr_multi, make_sssp_multi, ppr_multi, sssp_multi,
+    traverse_multi_buckets,
 )
 from repro.graphs.ppr import (  # noqa: F401
     PPRResult, pagerank, pagerank_reference, ppr, ppr_reference,

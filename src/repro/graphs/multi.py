@@ -13,6 +13,11 @@ kernel-choice trace and per-query iteration counts).
 ``mesh``/``axis_name`` shard the [B, n] block over devices: queries are
 independent, so the block row-shards with no cross-device traffic beyond
 the scalar convergence reduction.
+
+``traverse_multi_buckets`` is the pipelined bucket mode: several source
+buckets drain through core.pipeline.pipeline_buckets so bucket *t+1*'s
+jitted while_loop is dispatched while bucket *t*'s results are awaited —
+the serving layer's phase overlap (see serve.graph_engine).
 """
 from __future__ import annotations
 
@@ -24,6 +29,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.adaptive import select_kernel_batch
+from repro.core.pipeline import pipeline_buckets
 from repro.core.semiring import BOOL_OR_AND, MIN_PLUS, PLUS_TIMES
 from repro.graphs.engine import GraphEngine, density_of_batch
 
@@ -265,6 +271,44 @@ def sssp_multi(engine: GraphEngine, sources, max_iters: int = 64,
     run = _cached_runner(engine, "sssp", int(src.shape[0]), mesh, axis_name,
                          max_iters=max_iters, policy=policy)
     return run(src)
+
+
+def traverse_multi_buckets(engine: GraphEngine, alg: str, buckets,
+                           pipeline_depth: int = 2, mesh: Mesh | None = None,
+                           axis_name: str = "batch", materialize=None,
+                           pad_to: int | None = None, **kwargs) -> list:
+    """Pipelined bucket mode: run several source buckets through the cached
+    batched runners, keeping up to ``pipeline_depth`` buckets in flight so
+    bucket *t+1*'s dispatch (and device compute) overlaps the host-side
+    await + conversion of bucket *t* (core.pipeline.pipeline_buckets).
+
+    ``materialize(bucket, result) -> value`` runs inside the overlap
+    window, in submission order, and receives the bucket *as submitted* —
+    put the host-side payload conversion there (the server does); the
+    default just blocks and returns the *BatchResult. ``pad_to`` pads
+    every issued bucket to that batch size by repeating its last source
+    (one compiled runner for all buckets; result rows past the submitted
+    bucket's length are padding). Without it, mixed-size buckets compile
+    one runner per distinct size. ``pipeline_depth=0`` is the strictly
+    sequential drain; results are identical at any depth — the same
+    jitted runner consumes the same buckets, only host sync order changes
+    (asserted in tests/test_multi_query.py). ``kwargs`` are the
+    per-algorithm maker options (max_iters / policy / alpha / tol).
+    Returns one materialised value per bucket, in submission order.
+    """
+    def issue(bucket):
+        sources = list(bucket)
+        if pad_to is not None and len(sources) < pad_to:
+            sources = sources + [sources[-1]] * (pad_to - len(sources))
+        src = _as_sources(sources)
+        run = _cached_runner(engine, alg, int(src.shape[0]), mesh,
+                             axis_name, **kwargs)
+        return run(src)
+
+    if materialize is None:
+        materialize = lambda _b, res: jax.block_until_ready(res)  # noqa: E731
+    return pipeline_buckets(issue, materialize, buckets,
+                            depth=pipeline_depth)
 
 
 def ppr_multi(engine: GraphEngine, sources, alpha: float = 0.85,

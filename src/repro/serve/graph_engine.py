@@ -22,6 +22,14 @@ Serving-side optimizations:
   by several servers — or kept across an engine rebuild — can never return
   stale cross-graph results.
 
+* **pipelined flush** — traversal misses drain in fixed-size buckets
+  through the bucket pipeline (graphs.multi.traverse_multi_buckets over
+  core.pipeline; phase vocabulary: core.distributed): bucket *t+1*'s
+  jitted traversal is dispatched while bucket *t*'s payloads are pulled to
+  host. ``pipeline_depth`` bounds the in-flight buckets; 0 restores the
+  strictly sequential drain with bit-identical results (it never enters
+  cache keys — only host sync order changes, never answers).
+
 A ``mesh`` row-shards each [B, n] traversal block over devices (queries are
 independent), which is how one server saturates an 8-device host.
 """
@@ -42,7 +50,7 @@ from repro.graphs.analytics import (
 from repro.graphs.cost_model import trained_stump
 from repro.graphs.datasets import Graph
 from repro.graphs.engine import GraphEngine, build_engine
-from repro.graphs.multi import bfs_multi, ppr_multi, sssp_multi
+from repro.graphs.multi import traverse_multi_buckets
 from repro.graphs.ppr import pagerank
 
 ALGORITHMS = ("bfs", "sssp", "ppr")
@@ -114,7 +122,8 @@ class GraphQueryServer:
                  alpha: float = 0.85, weight_seed: int = 5,
                  mesh=None, axis_name: str = "batch",
                  cache: LRUCache | None = None,
-                 triangle_dense_limit: int = 8192):
+                 triangle_dense_limit: int = 8192,
+                 pipeline_depth: int = 2):
         self.graph = graph
         self.stump = stump or trained_stump()
         self.batch_size = batch_size
@@ -125,6 +134,10 @@ class GraphQueryServer:
         self.mesh = mesh
         self.axis_name = axis_name
         self.triangle_dense_limit = triangle_dense_limit
+        # Bucket-pipeline depth for the flush drain (0 = blocking drain).
+        # Deliberately NOT part of engine_key: it moves host sync points,
+        # never answers.
+        self.pipeline_depth = pipeline_depth
         self.cache = cache if cache is not None else LRUCache(cache_capacity)
         # Everything that changes answers must be in the cache key: the
         # graph's edge content plus the engine-shaping parameters — the
@@ -192,26 +205,49 @@ class GraphQueryServer:
         return req
 
     # ------------------------------------------------------------------
-    def _run_batch(self, algorithm: str, sources: List[int]
-                   ) -> Dict[int, Dict[str, Any]]:
-        """One padded engine call for deduped ``sources`` -> per-source dicts."""
+    def _run_batches(self, algorithm: str, misses: List[int]
+                     ) -> Dict[int, Dict[str, Any]]:
+        """Drain the deduped ``misses`` as padded fixed-size buckets through
+        the bucket pipeline -> per-source result dicts. With
+        ``pipeline_depth > 0`` bucket t+1's traversal is already computing
+        while bucket t is materialised here; depth 0 is the sequential
+        drain (same runner, same buckets, identical results)."""
         eng = self.engine(algorithm)
-        padded = sources + [sources[-1]] * (self.batch_size - len(sources))
-        kw = dict(policy=self.policy, mesh=self.mesh,
-                  axis_name=self.axis_name)
+        chunks = [misses[lo: lo + self.batch_size]
+                  for lo in range(0, len(misses), self.batch_size)]
+        kw = dict(policy=self.policy, max_iters=self.max_iters)
+        if algorithm == "ppr":
+            kw["alpha"] = self.alpha
+
+        # materialize runs inside the pipeline's overlap window, so
+        # payload conversion of bucket t happens while bucket t+1
+        # computes; pad_to keeps one compiled runner for every bucket
+        def to_payloads(bucket, res) -> Dict[int, Dict[str, Any]]:
+            self.stats["batches"] += 1
+            return self._materialize(algorithm, res, bucket)
+
+        results = traverse_multi_buckets(
+            eng, algorithm, chunks, pipeline_depth=self.pipeline_depth,
+            mesh=self.mesh, axis_name=self.axis_name,
+            materialize=to_payloads, pad_to=self.batch_size, **kw)
+        out: Dict[int, Dict[str, Any]] = {}
+        for payloads in results:
+            out.update(payloads)
+        return out
+
+    @staticmethod
+    def _materialize(algorithm: str, res, sources: List[int]
+                     ) -> Dict[int, Dict[str, Any]]:
+        """One bucket's device result -> host payload dicts, keyed by source
+        (padding rows beyond ``sources`` are dropped)."""
         if algorithm == "bfs":
-            res = bfs_multi(eng, padded, max_iters=self.max_iters, **kw)
             rows = {"levels": np.asarray(res.levels)}
         elif algorithm == "sssp":
-            res = sssp_multi(eng, padded, max_iters=self.max_iters, **kw)
             rows = {"dist": np.asarray(res.dist)}
         else:
-            res = ppr_multi(eng, padded, alpha=self.alpha,
-                            max_iters=self.max_iters, **kw)
             rows = {"rank": np.asarray(res.rank),
                     "residual": np.asarray(res.residual)}
         iters = np.asarray(res.iterations)
-        self.stats["batches"] += 1
         out = {}
         for i, s in enumerate(sources):
             payload = {k: v[i] for k, v in rows.items()}
@@ -293,7 +329,6 @@ class GraphQueryServer:
                         req.result = dict(fresh)
                 continue
 
-            fresh: Dict[int, Dict[str, Any]] = {}
             misses: List[int] = []
             seen = set()
             for req in reqs:
@@ -309,9 +344,8 @@ class GraphQueryServer:
                     misses.append(req.source)
                 else:
                     self.stats["deduped"] += 1
-            for lo in range(0, len(misses), self.batch_size):
-                chunk = misses[lo: lo + self.batch_size]
-                fresh.update(self._run_batch(algorithm, chunk))
+            fresh: Dict[int, Dict[str, Any]] = (
+                self._run_batches(algorithm, misses) if misses else {})
             for src, payload in fresh.items():
                 self.cache.put((self.engine_key, algorithm, src), payload)
             for req in reqs:

@@ -27,7 +27,10 @@ def test_every_runnable_module_is_registered():
         p.stem for p in BENCH_DIR.glob("*.py")
         if re.search(r"^def run\(", p.read_text(), re.M))
     assert sorted(modules) == runnable
-    for name in ("multi_query", "analytics", "table4_apps"):
+    # phases/pipeline_overlap: the ISSUE-3 satellite — the per-phase
+    # accounting and the overlap benchmark must ship --json metric rows
+    for name in ("multi_query", "analytics", "table4_apps", "phases",
+                 "pipeline_overlap"):
         assert name in modules
 
 

@@ -129,3 +129,80 @@ def test_distributed_batched_matvec_8dev():
                          capture_output=True, text=True, timeout=900)
     assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
     assert "BATCHED_DISTRIBUTED_OK 12" in res.stdout, res.stdout
+
+
+PIPELINE_WORKER = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import *
+from repro.core.distributed import build_phase_fns
+from repro.core.pipeline import iterate_phases
+
+rng = np.random.default_rng(3)
+n = 128
+dense_np = (rng.random((n, n)) < 0.08).astype(np.float32) * rng.integers(1, 9, (n, n))
+rows, cols = np.nonzero(dense_np)
+vals = dense_np[rows, cols].astype(np.float32)
+mesh = jax.make_mesh((2, 4), ("dr", "dc"))
+
+checked = 0
+for sr in (PLUS_TIMES, MIN_PLUS, BOOL_OR_AND):
+    if sr.name == "min_plus":
+        dense = np.where(dense_np != 0, dense_np, np.inf).astype(np.float32)
+        x = np.where(rng.random(n) < 0.3, rng.random(n), np.inf).astype(np.float32)
+        v = vals; fill = np.inf
+    elif sr.name == "bool_or_and":
+        dense = (dense_np != 0).astype(np.int32)
+        x = (rng.random(n) < 0.3).astype(np.int32)
+        v = np.ones_like(vals, dtype=np.int32); fill = 0
+    else:
+        dense = dense_np
+        x = np.where(rng.random(n) < 0.3, rng.random(n), 0).astype(np.float32)
+        v = vals; fill = 0.0
+    xo = jnp.asarray(x, sr.dtype)        # 4-iteration dense oracle
+    for _ in range(4):
+        xo = sr.matvec(jnp.asarray(dense, sr.dtype), xo)
+    oracle = np.asarray(xo)
+    for strategy, grid, fmt, kern in [("row", (8, 1), "csr", "spmv"),
+                                      ("col", (1, 8), "csc", "spmspv"),
+                                      ("2d", (2, 4), "csc", "spmspv"),
+                                      ("2d", (2, 4), "coo", "spmv")]:
+        pm = partition(rows, cols, v, (n, n), grid, fmt, sr)
+        n_pad = pm.shape[1]
+        xp = np.full(n_pad, fill, dtype=x.dtype); xp[:n] = x
+        xs = jnp.asarray(xp.reshape(8, -1), sr.dtype)
+        fns = build_phase_fns(mesh, pm, sr, strategy, kern)
+        y_blocking = iterate_phases(fns, pm.parts, xs, 4, depth=0)
+        for depth in (1, 3):
+            y_pip = iterate_phases(fns, pm.parts, xs, 4, depth=depth)
+            np.testing.assert_array_equal(
+                np.asarray(y_blocking), np.asarray(y_pip),
+                err_msg=f"{sr.name}/{strategy}/{fmt}/{kern}/depth{depth}")
+        if strategy == "col":
+            # donate=True (R+M buffer reuse; no-op on CPU backends) must
+            # not change results either
+            fns_don = build_phase_fns(mesh, pm, sr, strategy, kern, donate=True)
+            y_don = iterate_phases(fns_don, pm.parts, xs, 4, depth=2)
+            np.testing.assert_array_equal(np.asarray(y_blocking), np.asarray(y_don))
+        got = np.asarray(y_blocking).reshape(-1)[:n]
+        np.testing.assert_allclose(got, oracle, rtol=1e-5,
+                                   err_msg=f"{sr.name}/{strategy}/{fmt}/{kern}")
+        checked += 1
+print(f"PIPELINE_OK {checked}")
+"""
+
+
+@pytest.mark.slow
+def test_pipelined_iteration_matches_blocking_8dev():
+    """core.pipeline.iterate_phases: the pipelined schedule (depths 1 and
+    3) must be bit-identical to the depth-0 blocking fallback for every
+    Fig.-3 strategy and traversal semiring, and both must match a dense
+    4-iteration oracle — the non-blocking-DMA model changes wall time,
+    never results."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = REPO_SRC + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run([sys.executable, "-c", PIPELINE_WORKER], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
+    assert "PIPELINE_OK 12" in res.stdout, res.stdout

@@ -214,6 +214,31 @@ def test_engine_param_changes_miss_cache(graph):
     assert a.result is not b.result
 
 
+def test_flush_pipelining_equality(graph):
+    """The pipelined flush drain (pipeline_depth > 0) must return results
+    bit-identical to the sequential drain (depth 0) for a multi-bucket,
+    multi-algorithm flood — the bucket pipeline moves host sync points,
+    never answers (ISSUE-3 acceptance)."""
+    seq = GraphQueryServer(graph, batch_size=4, cache_capacity=0,
+                           pipeline_depth=0)
+    pip = GraphQueryServer(graph, batch_size=4, cache_capacity=0,
+                           pipeline_depth=3)
+    srcs = list(range(10))               # 3 buckets per algorithm
+    for alg in ("bfs", "sssp", "ppr"):
+        for s in srcs:
+            seq.submit(alg, s)
+            pip.submit(alg, s)
+    done_seq, done_pip = seq.flush(), pip.flush()
+    assert len(done_seq) == len(done_pip) == 30
+    assert seq.stats["batches"] == pip.stats["batches"] == 9
+    for a, b in zip(done_seq, done_pip):
+        assert (a.algorithm, a.source) == (b.algorithm, b.source)
+        assert a.result.keys() == b.result.keys()
+        for key, val in a.result.items():
+            np.testing.assert_array_equal(np.asarray(val),
+                                          np.asarray(b.result[key]))
+
+
 def test_mixed_algorithms_one_flush(server, graph):
     rng = np.random.default_rng(5)
     subs = [(alg, int(s)) for alg in ("bfs", "sssp", "ppr")

@@ -8,6 +8,7 @@ import pytest
 from repro.core import BOOL_OR_AND, MIN_PLUS, PLUS_TIMES
 from repro.graphs import (
     bfs, bfs_multi, generate, ppr, ppr_multi, sssp, sssp_multi,
+    traverse_multi_buckets,
 )
 from repro.graphs.cost_model import trained_stump
 from repro.graphs.engine import build_engine
@@ -98,6 +99,58 @@ def test_multi_freezes_converged_queries(stump):
     # a frozen query's trace stops recording
     used = np.asarray(res.kernel_used)
     assert (used[1, int(iters[1]):] == -1).all()
+
+
+@pytest.mark.parametrize("alg", ["bfs", "sssp", "ppr"])
+def test_bucket_pipeline_matches_sequential(graph_and_sources, stump, alg):
+    """traverse_multi_buckets: the pipelined drain (depths 1/2) must be
+    bit-identical to the sequential depth-0 drain on identical buckets,
+    and every row must match the single-source app (the ISSUE-3 pipelined
+    traversal equality, bucket granularity)."""
+    _cls, g, sources = graph_and_sources
+    if alg == "bfs":
+        eng = build_engine(g, BOOL_OR_AND, stump)
+        single, field, exact = bfs, "levels", True
+    elif alg == "sssp":
+        eng = build_engine(g, MIN_PLUS, stump, weighted=True, seed=5)
+        single, field, exact = sssp, "dist", False
+    else:
+        eng = build_engine(g, PLUS_TIMES, stump, normalize=True)
+        single, field, exact = ppr, "rank", False
+    buckets = [sources[:4], sources[4:]]
+    blocking = traverse_multi_buckets(eng, alg, buckets, pipeline_depth=0)
+    for depth in (1, 2):
+        pipelined = traverse_multi_buckets(eng, alg, buckets,
+                                           pipeline_depth=depth)
+        for res_b, res_p in zip(blocking, pipelined):
+            for arr_b, arr_p in zip(res_b, res_p):
+                np.testing.assert_array_equal(np.asarray(arr_b),
+                                              np.asarray(arr_p))
+    for bucket, res in zip(buckets, blocking):
+        for i, s in enumerate(bucket):
+            ref = np.asarray(getattr(single(eng, s), field))
+            got = np.asarray(getattr(res, field)[i])
+            if exact:
+                np.testing.assert_array_equal(got, ref)
+            else:
+                np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-8)
+
+
+def test_bucket_pipeline_mixed_sizes_and_order(stump):
+    """Mixed-size buckets compile one runner per size and come back in
+    submission order at any depth."""
+    g = generate("face", scale=0.15, seed=1)
+    eng = build_engine(g, BOOL_OR_AND, stump)
+    rng = np.random.default_rng(9)
+    srcs = [int(s) for s in rng.integers(0, g.n, 7)]
+    buckets = [srcs[:4], srcs[4:6], srcs[6:]]    # sizes 4, 2, 1
+    out = traverse_multi_buckets(eng, "bfs", buckets, pipeline_depth=3)
+    assert [r.levels.shape[0] for r in out] == [4, 2, 1]
+    for bucket, res in zip(buckets, out):
+        for i, s in enumerate(bucket):
+            ref = bfs(eng, s)
+            np.testing.assert_array_equal(np.asarray(res.levels[i]),
+                                          np.asarray(ref.levels))
 
 
 def test_batched_closures_match_unbatched(stump):

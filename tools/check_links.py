@@ -1,0 +1,74 @@
+"""Fail on broken relative links in markdown files (the CI docs job).
+
+    python tools/check_links.py README.md docs
+
+Arguments are markdown files or directories (scanned for *.md). For every
+inline link/image `[text](target)`, a relative target must resolve to an
+existing file or directory (an optional `#fragment` is stripped; external
+schemes and pure in-page anchors are skipped). Exit 1 listing every broken
+link, 0 otherwise.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+# inline links/images; [text](target "title") keeps only the target
+_LINK = re.compile(r"!?\[[^\]]*\]\(\s*<?([^)<>\s]+)>?(?:\s+\"[^\"]*\")?\s*\)")
+_SKIP = ("http://", "https://", "mailto:", "ftp://")
+
+
+def md_files(args: list[str]) -> list[pathlib.Path]:
+    out: list[pathlib.Path] = []
+    for a in args:
+        p = pathlib.Path(a)
+        if p.is_dir():
+            out.extend(sorted(p.rglob("*.md")))
+        elif p.suffix == ".md":
+            out.append(p)
+        else:
+            print(f"check_links: skipping non-markdown argument {a}")
+    return out
+
+
+def broken_links(md: pathlib.Path, root: pathlib.Path) -> list[tuple[int, str]]:
+    bad = []
+    for lineno, line in enumerate(md.read_text().splitlines(), start=1):
+        for target in _LINK.findall(line):
+            if target.startswith(_SKIP) or target.startswith("#"):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            if path.startswith("/"):
+                # GitHub-style root-absolute link: repo-root-relative
+                resolved = (root / path.lstrip("/")).resolve()
+            else:
+                resolved = (md.parent / path).resolve()
+                if not resolved.is_relative_to(root):
+                    # escapes the repo (e.g. the GitHub-web-relative CI
+                    # badge): nothing in the working tree to validate
+                    continue
+            if not resolved.exists():
+                bad.append((lineno, target))
+    return bad
+
+
+def main(argv: list[str]) -> int:
+    files = md_files(argv or ["README.md", "docs"])
+    if not files:
+        print("check_links: no markdown files found")
+        return 1
+    root = pathlib.Path.cwd().resolve()
+    failures = 0
+    for md in files:
+        for lineno, target in broken_links(md, root):
+            print(f"{md}:{lineno}: broken relative link -> {target}")
+            failures += 1
+    print(f"check_links: {len(files)} files, {failures} broken links")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
