@@ -59,24 +59,25 @@ def phase_times(mesh, pm, sr, strategy, kernel, xs, timeit,
 
 
 def prep(graph, sr, grid, fmt, weighted=False, normalize=False, seed=0,
-         block=(16, 16)):
+         block=(16, 16), balance="rows"):
     """Partition a graph's transposed adjacency. The global shape is padded
-    to a multiple of 64 so every grid x device-count combination divides."""
+    to a multiple of 64 so every grid x device-count combination divides.
+    ``balance`` picks the PartitionPlan's cut mode (core.partition)."""
     from repro.graphs.engine import edge_values
     vals = edge_values(graph, sr, weighted, seed, normalize)
     rows, cols = graph.cols.astype(np.int32), graph.rows.astype(np.int32)
     n_pad = -(-graph.n // 64) * 64
     pm = partition(rows, cols, vals, (n_pad, n_pad), grid, fmt, sr,
-                   block=block)
+                   block=block, balance=balance)
     return pm
 
 
 def shard_x(x_np: np.ndarray, pm: PartitionedMatrix, sr: Semiring):
+    """Global vector → the plan's canonical input layout (device block)."""
     fill = np.inf if sr.name == "min_plus" else 0
-    n_pad = pm.shape[1]
-    xp = np.full(n_pad, fill, dtype=np.asarray(x_np).dtype)
+    xp = np.full(pm.plan.shape[1], fill, dtype=np.asarray(x_np).dtype)
     xp[: x_np.shape[0]] = x_np
-    return jnp.asarray(xp.reshape(pm.n_devices, -1), sr.dtype)
+    return jnp.asarray(pm.plan.shard_input_vector(xp, fill), sr.dtype)
 
 
 STRATEGIES = [("row", (8, 1), "csr", "spmv"),

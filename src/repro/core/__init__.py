@@ -22,7 +22,10 @@ from repro.core.adaptive import (  # noqa: F401
     DecisionStump, GraphFeatures, adaptive_matvec, adaptive_matvec_batch,
     fit_decision_stump, select_kernel_batch,
 )
-from repro.core.partition import PartitionedMatrix, partition, shard_vector  # noqa: F401
+from repro.core.partition import (  # noqa: F401
+    PartitionedMatrix, PartitionPlan, balanced_cuts, partition,
+    plan_partition, shard_vector, unpartition,
+)
 from repro.core.pipeline import (  # noqa: F401
     iterate_phases, pipeline_buckets, run_phases_once,
 )

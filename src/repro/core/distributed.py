@@ -21,6 +21,17 @@ Between traversal iterations, ``vec_to_2d_layout`` converts the output
 layout into the next iteration's input layout — the paper's inter-iteration
 retrieve+reload through the host CPU, which on TPU is a collective permute.
 
+Which rows/cols land on which device is the :class:`~repro.core.partition
+.PartitionPlan`'s decision (``balance="rows"`` equal-count tiles vs
+``balance="nnz"`` work-balanced bands): every factory here consumes the
+plan through the PartitionedMatrix and assumes its canonical vector
+layouts — input chunk ``g = c*R + r`` holds piece *r* of column band *c*,
+output chunk ``g = r*C + c`` holds piece *c* of row band *r* (identical to
+plain row-major slicing for ``balance="rows"``).  Callers shard/unshard
+through the plan helpers (``plan.shard_input_vector`` etc.); the
+collectives themselves are balance-agnostic.  The cost-model planner
+(graphs.cost_model.choose_partition) picks strategy+balance per graph.
+
 This module is the **single definition point** for the four-phase
 vocabulary above; other modules (core.pipeline, serve.graph_engine, the
 benchmarks) cross-reference it instead of re-explaining the phases.
@@ -93,6 +104,16 @@ def gather_frontier(x_local: Array, sr: Semiring, f_local: int,
                     jnp.sum(ok.astype(jnp.int32)), d * n_per)
 
 
+def _check_plan(pm: PartitionedMatrix, strategy: str) -> None:
+    """A strategy only makes sense on a matching grid: the plan's split
+    axes must line up with the collectives the strategy issues."""
+    r_parts, c_parts = pm.grid
+    if strategy == "row" and c_parts != 1:
+        raise ValueError(f"row strategy needs a (D, 1) grid, got {pm.grid}")
+    if strategy == "col" and r_parts != 1:
+        raise ValueError(f"col strategy needs a (1, D) grid, got {pm.grid}")
+
+
 def make_distributed_matvec(
     mesh: Mesh,
     pm: PartitionedMatrix,
@@ -106,13 +127,18 @@ def make_distributed_matvec(
     """Build `fn(parts, x_sharded) -> y_sharded` under shard_map.
 
     x/y layout is the canonical flat one: [D, n_per] sharded over the flat
-    device axes, so iterative algorithms can feed y straight back in
-    (after reshard for 2d).
+    device axes (the plan's input/output layouts — see
+    ``PartitionPlan.shard_input_vector`` / ``unshard_output_vector``; for
+    ``balance="rows"`` these are plain row-major chunks, so iterative
+    algorithms can feed y straight back in after the 2d reshard).  With
+    ``balance="nnz"`` the input and output chunkings differ, so chaining
+    iterations requires an unshard/reshard through the plan between steps.
 
     ``f_local`` (SpMSpV only) switches the Load phase to the paper's
     compressed form: each shard all-gathers a capacity-``f_local`` frontier
     instead of its dense slice (see gather_frontier).
     """
+    _check_plan(pm, strategy)
     ar, ac = axis_names
     flat = (ar, ac)
     r_parts, c_parts = pm.grid
@@ -189,6 +215,22 @@ def make_distributed_matvec(
                      check_rep=False)
 
 
+def make_distributed_spmv(mesh: Mesh, pm: PartitionedMatrix, sr: Semiring,
+                          strategy: str, **kwargs
+                          ) -> Callable[[object, Array], Array]:
+    """make_distributed_matvec pinned to the dense-input SpMV kernel."""
+    return make_distributed_matvec(mesh, pm, sr, strategy, kernel="spmv",
+                                   **kwargs)
+
+
+def make_distributed_spmspv(mesh: Mesh, pm: PartitionedMatrix, sr: Semiring,
+                            strategy: str, **kwargs
+                            ) -> Callable[[object, Array], Array]:
+    """make_distributed_matvec pinned to the sparse-frontier SpMSpV kernel."""
+    return make_distributed_matvec(mesh, pm, sr, strategy, kernel="spmspv",
+                                   **kwargs)
+
+
 def _op_reduce_scatter_batched(x: Array, sr: Semiring, axis_name,
                                axis_size: int) -> Array:
     """Batched ⊕-reduce-scatter: x is [B, M_local_out * axis_size]; the
@@ -222,7 +264,10 @@ def make_distributed_batched_matvec(
     The compressed-frontier Load (``f_local``) stays single-query only:
     per-row frontiers have different live counts, so a shared capacity
     would re-introduce the truncation ambiguity the ladder avoids.
+    Balanced (``balance="nnz"``) plans work unchanged: shard the block with
+    ``plan.shard_input_batch`` and recover it with ``unshard_output_batch``.
     """
+    _check_plan(pm, strategy)
     ar, ac = axis_names
     flat = (ar, ac)
     r_parts, c_parts = pm.grid
@@ -324,7 +369,10 @@ def make_distributed_spgemm(
     [D, k_per, N] and C / mask are [D, m_per, N] in the canonical flat
     layout. The mask is structural (see core.spgemm) and is applied
     post-merge, on already-sharded output rows — masking never crosses
-    the fabric."""
+    the fabric.  B rows shard via ``plan.shard_input_rows``; C and the mask
+    live in the output-row layout (``plan.shard_output_rows`` /
+    ``unshard_output_rows``), so balanced plans work unchanged."""
+    _check_plan(pm, strategy)
     ar, ac = axis_names
     flat = (ar, ac)
     r_parts, c_parts = pm.grid
@@ -433,7 +481,14 @@ def build_phase_fns(mesh: Mesh, pm: PartitionedMatrix, sr: Semiring,
     With donation enabled, never call ``retrieve_merge`` twice on the same
     partials (repeated timing does exactly that — benchmarks.phases times
     undonated closures for this reason).
+
+    Balanced (``balance="nnz"``) plans time/apply every phase correctly;
+    only the inter-iteration chaining (``feedback`` + re-Load) additionally
+    assumes the input and output chunkings coincide, which holds for
+    ``balance="rows"`` square tiles — iterating a balanced plan requires a
+    plan unshard/reshard between steps instead.
     """
+    _check_plan(pm, strategy)
     ar, ac = "dr", "dc"
     flat = (ar, ac)
     d = pm.n_devices

@@ -1,15 +1,42 @@
-"""Decision-tree kernel-selection cost model (paper §4.2.1).
+"""Cost models: kernel selection (paper §4.2.1) + the partition planner.
 
-Trained offline on a labelled synthetic corpus (the paper trains on "a
-diverse set of real-world graphs"); two features — average degree and
-degree std-dev — classify a graph as regular (switch at 20% density) or
-scale-free (switch at 50%).
+Kernel selection: a decision stump trained offline on a labelled synthetic
+corpus (the paper trains on "a diverse set of real-world graphs"); two
+features — average degree and degree std-dev — classify a graph as regular
+(switch at 20% density) or scale-free (switch at 50%).
+
+Partition planning: the paper's other selection problem — "selecting
+optimal data partitioning strategies across PIM cores".
+:func:`choose_partition` estimates, for every Fig.-3 strategy ×
+``balance`` mode, the per-device Load / Kernel / Retrieve cost of one
+distributed matvec in element traffic/work (the same accounting
+core.distributed's phases use):
+
+    Load     — input elements each device must assemble: the full vector
+               (row), nothing (col), or one padded column band (2d),
+               scaled by the expected frontier density;
+    Kernel   — the max per-device tile nnz, taken from the candidate
+               :class:`~repro.core.partition.PartitionPlan`'s exact
+               ``tile_nnz`` (the degree histogram *is* the skew input —
+               no closed-form proxy needed);
+    Retrieve — partial-output elements each device must exchange for the
+               ⊕-reduce-scatter: nothing (row), the full padded height
+               (col), or one padded row band (2d).
+
+The winner is the lowest total; ties break toward the lower measured
+imbalance, so ``strategy="auto"`` (serve.graph_engine / graphs.multi) can
+never pick a plan more skewed than the worst fixed strategy.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+from typing import Tuple
+
+import numpy as np
 
 from repro.core.adaptive import DecisionStump, GraphFeatures, fit_decision_stump
+from repro.core.partition import BALANCES, PartitionPlan, plan_partition
 from repro.graphs import datasets
 
 
@@ -34,3 +61,141 @@ def training_corpus(seed: int = 0) -> tuple[list[GraphFeatures], list[str]]:
 def trained_stump(seed: int = 0) -> DecisionStump:
     feats, labels = training_corpus(seed)
     return fit_decision_stump(feats, labels)
+
+
+# ---------------------------------------------------------------------------
+# Partition planner (paper §4.1.1 / Fig. 3 strategy selection)
+# ---------------------------------------------------------------------------
+
+STRATEGIES = ("row", "col", "2d")
+
+
+def strategy_grid(strategy: str, n_devices: int,
+                  grid2d: Tuple[int, int] | None = None) -> Tuple[int, int]:
+    """The (R, C) grid a Fig.-3 strategy uses on ``n_devices`` devices."""
+    if strategy == "row":
+        return (n_devices, 1)
+    if strategy == "col":
+        return (1, n_devices)
+    if strategy == "2d":
+        if grid2d is None:
+            r = int(np.floor(np.sqrt(n_devices)))
+            while n_devices % r:
+                r -= 1
+            return (r, n_devices // r)
+        assert grid2d[0] * grid2d[1] == n_devices, (grid2d, n_devices)
+        return tuple(grid2d)
+    raise ValueError(f"unknown strategy {strategy!r}; expected one of "
+                     f"{STRATEGIES}")
+
+
+def parse_strategy(spec: str, balance: str | None = None):
+    """Parse a user-facing strategy spec: ``"auto"`` or one of
+    ``row``/``col``/``2d``, optionally suffixed ``:rows``/``:nnz`` (the
+    suffix and an explicit ``balance`` kwarg must agree).  Returns
+    ``(strategy, balance)`` with ``balance=None`` meaning "planner's
+    choice" (auto) / legacy ``"rows"`` (fixed strategies)."""
+    if ":" in spec:
+        spec, suffix = spec.split(":", 1)
+        if balance is not None and balance != suffix:
+            raise ValueError(f"strategy suffix {suffix!r} contradicts "
+                             f"balance={balance!r}")
+        balance = suffix
+    if spec != "auto" and spec not in STRATEGIES:
+        raise ValueError(f"unknown strategy {spec!r}; expected 'auto' or one "
+                         f"of {STRATEGIES} (optionally ':rows'/':nnz')")
+    if balance is not None and balance not in BALANCES:
+        raise ValueError(f"balance must be one of {BALANCES}, got {balance!r}")
+    return spec, balance
+
+
+def candidate_space(strategy: str, balance: str | None):
+    """The (strategies, balances) search space a parsed spec opens: auto
+    sweeps everything unconstrained; a fixed strategy pins it; a fixed
+    strategy without an explicit balance keeps the legacy ``"rows"``."""
+    strategies = STRATEGIES if strategy == "auto" else (strategy,)
+    if balance is not None:
+        balances: tuple = (balance,)
+    else:
+        balances = BALANCES if strategy == "auto" else ("rows",)
+    return strategies, balances
+
+
+def estimate_phase_costs(plan: PartitionPlan, strategy: str,
+                         kernel: str = "spmv",
+                         frontier_density: float = 1.0) -> dict:
+    """Per-device Load/Kernel/Retrieve element costs of one distributed
+    matvec under ``plan`` (see module docstring for the accounting)."""
+    m_loc, n_loc = plan.local_shape
+    m_pad, n_pad = plan.padded_shape
+    density = float(np.clip(frontier_density, 0.0, 1.0))
+    if strategy == "row":
+        load, retrieve = n_pad * density, 0.0
+    elif strategy == "col":
+        load, retrieve = 0.0, float(m_pad)
+    else:
+        load, retrieve = n_loc * density, float(m_loc)
+    kern = float(max(plan.tile_nnz, default=0))
+    if kernel == "spmspv":
+        kern *= density
+    total = load + kern + retrieve
+    return {"load": load, "kernel": kern, "retrieve": retrieve,
+            "total": total, "imbalance": plan.imbalance()}
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PlannerChoice:
+    """The planner's answer for one graph: the picked strategy+balance, its
+    plan, and the full per-candidate cost table (keyed (strategy, balance))
+    for reporting."""
+
+    strategy: str
+    balance: str
+    grid: Tuple[int, int]
+    plan: PartitionPlan
+    costs: dict
+
+
+def choose_partition(rows: np.ndarray, cols: np.ndarray,
+                     shape: Tuple[int, int], n_devices: int = 8,
+                     grid2d: Tuple[int, int] | None = None,
+                     kernel: str = "spmv", frontier_density: float = 1.0,
+                     strategies=STRATEGIES, balances=BALANCES
+                     ) -> PlannerChoice:
+    """Pick the (strategy, balance) with the lowest estimated per-device
+    phase total for this edge list; ties break toward lower imbalance.
+    ``rows``/``cols`` are the edges of the matrix that will be partitioned
+    (for traversal engines that is the *transposed* adjacency)."""
+    rows = np.asarray(rows, np.int64)
+    cols = np.asarray(cols, np.int64)
+    table: dict = {}
+    best = None
+    for strategy in strategies:
+        grid = strategy_grid(strategy, n_devices, grid2d)
+        for balance in balances:
+            plan = plan_partition(rows, cols, shape, grid, balance)
+            cost = estimate_phase_costs(plan, strategy, kernel,
+                                        frontier_density)
+            table[(strategy, balance)] = cost
+            key = (cost["total"], cost["imbalance"])
+            if best is None or key < best[0]:
+                best = (key, strategy, balance, grid, plan)
+    _, strategy, balance, grid, plan = best
+    return PlannerChoice(strategy=strategy, balance=balance, grid=grid,
+                         plan=plan, costs=table)
+
+
+def plan_for_graph(graph, n_devices: int = 8,
+                   grid2d: Tuple[int, int] | None = None,
+                   kernel: str = "spmv", frontier_density: float = 1.0,
+                   strategies=STRATEGIES, balances=BALANCES
+                   ) -> PlannerChoice:
+    """:func:`choose_partition` for a Graph's *transposed* adjacency (the
+    matrix traversal engines multiply by), with the global shape padded to
+    a multiple of 64 so every grid divides it — the same convention as
+    benchmarks.phases.prep."""
+    n_pad = -(-graph.n // 64) * 64
+    return choose_partition(graph.cols, graph.rows, (n_pad, n_pad),
+                            n_devices=n_devices, grid2d=grid2d,
+                            kernel=kernel, frontier_density=frontier_density,
+                            strategies=strategies, balances=balances)

@@ -311,6 +311,55 @@ def traverse_multi_buckets(engine: GraphEngine, alg: str, buckets,
                             depth=pipeline_depth)
 
 
+def partitioned_matvec(graph, sr, mesh, strategy: str = "auto",
+                       balance: str | None = None, kernel: str = "spmv",
+                       fmt: str | None = None, frontier_density: float = 1.0,
+                       weighted: bool = False, normalize: bool = False,
+                       seed: int = 0, batched: bool = False):
+    """Partition ``graph``'s transposed adjacency over ``mesh`` (axes
+    ``dr``/``dc``) and build its distributed matvec — the Fig.-3 execution
+    path of the many-query layer, with the partition decided by the
+    cost-model planner.
+
+    ``strategy="auto"`` lets :func:`repro.graphs.cost_model
+    .choose_partition` pick strategy+balance from the graph's degree
+    histogram and ``frontier_density``; a fixed ``"row"``/``"col"``/
+    ``"2d"`` (optionally suffixed ``:rows``/``:nnz``, or with an explicit
+    ``balance``) pins it while still producing the planner's cost table.
+
+    Returns ``(pm, fn, choice)``: the PartitionedMatrix (its ``plan``
+    carries the shard/unshard layout helpers), the jit-ready matvec
+    (``batched=True`` builds the [B, n]-block variant), and the
+    :class:`~repro.graphs.cost_model.PlannerChoice`.
+    """
+    from repro.core.distributed import (
+        make_distributed_batched_matvec, make_distributed_matvec,
+    )
+    from repro.core.partition import partition
+    from repro.graphs.cost_model import (
+        candidate_space, parse_strategy, plan_for_graph,
+    )
+    from repro.graphs.engine import edge_values
+
+    strategy, balance = parse_strategy(strategy, balance)
+    strategies, balances = candidate_space(strategy, balance)
+    n_dev = mesh.shape["dr"] * mesh.shape["dc"]
+    grid2d = (mesh.shape["dr"], mesh.shape["dc"])
+    choice = plan_for_graph(graph, n_devices=n_dev, grid2d=grid2d,
+                            kernel=kernel, frontier_density=frontier_density,
+                            strategies=strategies, balances=balances)
+    vals = edge_values(graph, sr, weighted, seed, normalize)
+    fmt = fmt or ("csc" if kernel == "spmspv" else "csr")
+    rows = graph.cols.astype(np.int64)   # transposed: pull from in-neighbours
+    cols = graph.rows.astype(np.int64)
+    pm = partition(rows, cols, vals, choice.plan.shape, choice.grid, fmt, sr,
+                   plan=choice.plan)
+    maker = (make_distributed_batched_matvec if batched
+             else make_distributed_matvec)
+    fn = maker(mesh, pm, sr, choice.strategy, kernel=kernel)
+    return pm, fn, choice
+
+
 def ppr_multi(engine: GraphEngine, sources, alpha: float = 0.85,
               max_iters: int = 50, tol: float = 1e-6,
               policy: str = "adaptive", mesh: Mesh | None = None,

@@ -22,6 +22,16 @@ Serving-side optimizations:
   by several servers — or kept across an engine rebuild — can never return
   stale cross-graph results.
 
+* **partition planning** — at construction the server runs the paper's
+  strategy-selection problem through the cost-model planner
+  (graphs.cost_model.choose_partition): ``strategy="auto"`` picks the
+  Fig.-3 strategy + balance mode with the lowest estimated per-device
+  Load/Kernel/Retrieve cost for this graph's degree histogram; a fixed
+  ``"row"``/``"col"``/``"2d"`` (optionally ``:rows``/``:nnz``) pins it.
+  The decision is recorded as ``server.partition_choice`` and drives
+  ``partitioned_matvec()`` (the mesh execution path); it never changes
+  answers, so it is deliberately NOT part of the cache key.
+
 * **pipelined flush** — traversal misses drain in fixed-size buckets
   through the bucket pipeline (graphs.multi.traverse_multi_buckets over
   core.pipeline; phase vocabulary: core.distributed): bucket *t+1*'s
@@ -47,7 +57,9 @@ from repro.core.semiring import BOOL_OR_AND, MIN_PLUS, MIN_TIMES, PLUS_TIMES
 from repro.graphs.analytics import (
     connected_components, kcore, triangle_count, triangle_reference,
 )
-from repro.graphs.cost_model import trained_stump
+from repro.graphs.cost_model import (
+    candidate_space, parse_strategy, plan_for_graph, trained_stump,
+)
 from repro.graphs.datasets import Graph
 from repro.graphs.engine import GraphEngine, build_engine
 from repro.graphs.multi import traverse_multi_buckets
@@ -123,7 +135,9 @@ class GraphQueryServer:
                  mesh=None, axis_name: str = "batch",
                  cache: LRUCache | None = None,
                  triangle_dense_limit: int = 8192,
-                 pipeline_depth: int = 2):
+                 pipeline_depth: int = 2,
+                 strategy: str = "auto",
+                 partition_devices: int = 8):
         self.graph = graph
         self.stump = stump or trained_stump()
         self.batch_size = batch_size
@@ -138,6 +152,16 @@ class GraphQueryServer:
         # Deliberately NOT part of engine_key: it moves host sync points,
         # never answers.
         self.pipeline_depth = pipeline_depth
+        # Partition planning (paper §4.1.1): the spec is validated now so a
+        # bad one fails at construction, but the plans themselves (O(nnz)
+        # per candidate) are built lazily on first partition_choice access
+        # — the default submit/flush path never needs them.  Like
+        # pipeline_depth, the choice moves data placement, never answers —
+        # not in engine_key.
+        self.strategy_spec = strategy
+        self.partition_devices = partition_devices
+        self._strategy, self._balance = parse_strategy(strategy)
+        self._partition_choice = None
         self.cache = cache if cache is not None else LRUCache(cache_capacity)
         # Everything that changes answers must be in the cache key: the
         # graph's edge content plus the engine-shaping parameters — the
@@ -181,6 +205,43 @@ class GraphQueryServer:
                                  f"{ALGORITHMS + GLOBAL_ALGORITHMS}")
             self._engines[algorithm] = eng
         return self._engines[algorithm]
+
+    @property
+    def partition_choice(self):
+        """The planner's strategy+balance decision for this graph
+        (graphs.cost_model.PlannerChoice), computed on first access."""
+        if self._partition_choice is None:
+            strategies, balances = candidate_space(self._strategy,
+                                                   self._balance)
+            self._partition_choice = plan_for_graph(
+                self.graph, n_devices=self.partition_devices,
+                strategies=strategies, balances=balances)
+        return self._partition_choice
+
+    def partitioned_matvec(self, algorithm: str, mesh, kernel: str = "spmv",
+                           batched: bool = False):
+        """The mesh execution path for this server's planned partition:
+        partition the graph for ``algorithm``'s semiring per
+        ``partition_choice`` and build the distributed matvec
+        (graphs.multi.partitioned_matvec).  Returns ``(pm, fn, choice)``;
+        ``pm.plan`` owns the shard/unshard layout helpers."""
+        from repro.graphs.multi import partitioned_matvec as _pmv
+
+        if algorithm == "bfs":
+            sr, kw = BOOL_OR_AND, {}
+        elif algorithm == "sssp":
+            sr, kw = MIN_PLUS, {"weighted": True, "seed": self.weight_seed}
+        elif algorithm in ("ppr", "pagerank"):
+            sr, kw = PLUS_TIMES, {"normalize": True}
+        elif algorithm == "cc":
+            sr, kw = MIN_TIMES, {}
+        elif algorithm == "kcore":
+            sr, kw = PLUS_TIMES, {}
+        else:
+            raise ValueError(f"unknown algorithm {algorithm!r}")
+        c = self.partition_choice
+        return _pmv(self.graph, sr, mesh, strategy=c.strategy,
+                    balance=c.balance, kernel=kernel, batched=batched, **kw)
 
     def submit(self, algorithm: str, source: int | None = None) -> GraphRequest:
         """Enqueue one query; resolution happens at the next flush().

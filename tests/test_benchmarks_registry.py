@@ -1,7 +1,11 @@
 """The suite runner (benchmarks/run.py) must register every benchmark
 module that exposes a ``run(quick=...)`` entrypoint — regression for the
 ISSUE-2 satellite (multi_query / analytics were at risk of being left out
-of `python -m benchmarks.run`)."""
+of `python -m benchmarks.run`) — and the CI bench-regression gate
+(tools/compare_bench.py) must fail on structural/checksum drift while
+ignoring timing noise (ISSUE-4 satellite)."""
+import importlib.util
+import json
 import os
 import pathlib
 import re
@@ -10,6 +14,7 @@ import sys
 import jax  # noqa: F401  (import first: benchmarks.common must not repin devices)
 
 BENCH_DIR = pathlib.Path(__file__).resolve().parent.parent / "benchmarks"
+TOOLS_DIR = BENCH_DIR.parent / "tools"
 
 
 def _modules_list():
@@ -45,3 +50,99 @@ def test_devices_not_repinned():
     before = os.environ.get("XLA_FLAGS")
     _modules_list()
     assert os.environ.get("XLA_FLAGS") == before
+
+
+# ---------------------------------------------------------------------------
+# CI bench-regression gate (tools/compare_bench.py)
+# ---------------------------------------------------------------------------
+
+def _compare_bench():
+    spec = importlib.util.spec_from_file_location(
+        "compare_bench", TOOLS_DIR / "compare_bench.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+ROWS = [
+    {"bench": "partition_balance", "case": "rmat/row/nnz",
+     "imbalance": 1.01, "wall_ms": 3.2, "checksum": "24a13b3f6d22"},
+    {"bench": "partition_balance", "case": "rmat/row/rows",
+     "imbalance": 2.69, "wall_ms": 4.1, "checksum": "24a13b3f6d22"},
+    {"bench": "analytics", "case": "face/cc", "cpu_ms": 1.0},
+]
+
+
+def _write(tmp_path, name, rows):
+    p = tmp_path / name
+    p.write_text(json.dumps(rows))
+    return str(p)
+
+
+def test_bench_gate_passes_on_self_and_ignores_timings(tmp_path):
+    cb = _compare_bench()
+    cur = _write(tmp_path, "cur.json", ROWS)
+    base = str(tmp_path / "base.json")
+    assert cb.main([cur, "--baseline", base, "--update-baseline"]) == 0
+    assert cb.main([cur, "--baseline", base]) == 0
+    # wall-clock drift must NOT trip the gate (2-core runners)
+    drift = [dict(r) for r in ROWS]
+    drift[0]["wall_ms"] = 9999.0
+    drift[2]["cpu_ms"] = 0.001
+    assert cb.main([_write(tmp_path, "drift.json", drift),
+                    "--baseline", base]) == 0
+
+
+def test_bench_gate_fails_on_seeded_checksum_perturbation(tmp_path, capsys):
+    """The ISSUE-4 negative test: flip one result checksum → the gate must
+    exit nonzero naming the row."""
+    cb = _compare_bench()
+    base = str(tmp_path / "base.json")
+    assert cb.main([_write(tmp_path, "cur.json", ROWS),
+                    "--baseline", base, "--update-baseline"]) == 0
+    bad = [dict(r) for r in ROWS]
+    bad[0]["checksum"] = "deadbeef0000"       # seeded perturbation
+    rc = cb.main([_write(tmp_path, "bad.json", bad), "--baseline", base])
+    assert rc == 1
+    assert "checksum changed: partition_balance,rmat/row/nnz" \
+        in capsys.readouterr().out
+
+
+def test_bench_gate_fails_on_missing_row(tmp_path):
+    cb = _compare_bench()
+    base = str(tmp_path / "base.json")
+    cb.main([_write(tmp_path, "cur.json", ROWS),
+             "--baseline", base, "--update-baseline"])
+    assert cb.main([_write(tmp_path, "short.json", ROWS[1:]),
+                    "--baseline", base]) == 1
+
+
+def test_bench_gate_allows_new_rows(tmp_path):
+    cb = _compare_bench()
+    base = str(tmp_path / "base.json")
+    cb.main([_write(tmp_path, "cur.json", ROWS),
+             "--baseline", base, "--update-baseline"])
+    grown = ROWS + [{"bench": "new_bench", "case": "x/y", "checksum": "ff"}]
+    assert cb.main([_write(tmp_path, "grown.json", grown),
+                    "--baseline", base]) == 0
+
+
+def test_bench_gate_fails_without_baseline(tmp_path):
+    cb = _compare_bench()
+    assert cb.main([_write(tmp_path, "cur.json", ROWS),
+                    "--baseline", str(tmp_path / "absent.json")]) == 1
+
+
+def test_committed_baseline_gates_partition_balance():
+    """The committed baseline must cover every quick-mode family ×
+    strategy × balance row of partition_balance, each with a checksum —
+    otherwise the CI gate isn't pinning the planner's results."""
+    data = json.loads((BENCH_DIR / "baseline.json").read_text())
+    rows = {(r["bench"], r["case"]): r for r in data["rows"]}
+    for fam in ("road", "uniform", "rmat"):
+        for strat in ("row", "col", "2d"):
+            for bal in ("rows", "nnz"):
+                key = ("partition_balance", f"{fam}/{strat}/{bal}")
+                assert key in rows, key
+                assert rows[key].get("checksum"), key
+        assert ("partition_balance", f"{fam}/auto") in rows

@@ -48,27 +48,32 @@ for sr in (PLUS_TIMES, MIN_PLUS, BOOL_OR_AND):
              ("2d", (2, 4), "coo", "spmv"), ("row", (8, 1), "bsr", "spmv"),
              ("2d", (2, 4), "bsr", "spmspv")]
     for strategy, grid, fmt, kern in cases:
-        pm = partition(rows, cols, v, (n, n), grid, fmt, sr, block=(16, 16))
-        n_pad = pm.shape[1]
-        xp = np.full(n_pad, fill, dtype=x.dtype); xp[:n] = x
-        xs = jnp.asarray(xp.reshape(8, -1), sr.dtype)
-        fn = make_distributed_matvec(mesh, pm, sr, strategy, kernel=kern)
-        y = np.asarray(jax.jit(fn)(pm.parts, xs)).reshape(-1)[:n]
-        np.testing.assert_allclose(y, oracle, rtol=1e-5,
-                                   err_msg=f"{sr.name}/{strategy}/{fmt}/{kern}")
-        checked += 1
+        for balance in ("rows", "nnz"):
+            pm = partition(rows, cols, v, (n, n), grid, fmt, sr,
+                           block=(16, 16), balance=balance)
+            xs = jnp.asarray(pm.plan.shard_input_vector(x, fill), sr.dtype)
+            fn = make_distributed_matvec(mesh, pm, sr, strategy, kernel=kern)
+            y = pm.plan.unshard_output_vector(
+                np.asarray(jax.jit(fn)(pm.parts, xs)))
+            np.testing.assert_allclose(
+                y, oracle, rtol=1e-5,
+                err_msg=f"{sr.name}/{strategy}/{fmt}/{kern}/{balance}")
+            checked += 1
 print(f"DISTRIBUTED_OK {checked}")
 """
 
 
 @pytest.mark.slow
 def test_distributed_strategies_8dev():
+    """Every Fig.-3 strategy × format × balance mode must match the dense
+    semiring oracle — nnz-balanced plans included (ISSUE-4 acceptance:
+    planner-partitioned results equal the unpartitioned reference)."""
     env = dict(os.environ)
     env["PYTHONPATH"] = REPO_SRC + os.pathsep + env.get("PYTHONPATH", "")
     res = subprocess.run([sys.executable, "-c", WORKER], env=env,
                          capture_output=True, text=True, timeout=900)
     assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
-    assert "DISTRIBUTED_OK 21" in res.stdout, res.stdout
+    assert "DISTRIBUTED_OK 42" in res.stdout, res.stdout
 
 
 BATCHED_WORKER = r"""
@@ -105,30 +110,83 @@ for sr in (PLUS_TIMES, MIN_PLUS, BOOL_OR_AND):
                                       ("col", (1, 8), "csc", "spmspv"),
                                       ("2d", (2, 4), "csc", "spmspv"),
                                       ("2d", (2, 4), "coo", "spmv")]:
-        pm = partition(rows, cols, v, (n, n), grid, fmt, sr)
-        n_pad = pm.shape[1]
-        Xp = np.full((B, n_pad), fill, dtype=X.dtype); Xp[:, :n] = X
-        xs = jnp.asarray(Xp.reshape(B, 8, -1).transpose(1, 0, 2), sr.dtype)  # [D, B, n_per]
-        fn = make_distributed_batched_matvec(mesh, pm, sr, strategy, kernel=kern)
-        y = np.asarray(jax.jit(fn)(pm.parts, xs))
-        yf = y.transpose(1, 0, 2).reshape(B, -1)[:, :n]
-        np.testing.assert_allclose(yf, oracle, rtol=1e-5,
-                                   err_msg=f"{sr.name}/{strategy}/{fmt}/{kern}")
-        checked += 1
+        for balance in ("rows", "nnz"):
+            pm = partition(rows, cols, v, (n, n), grid, fmt, sr,
+                           balance=balance)
+            xs = jnp.asarray(pm.plan.shard_input_batch(X, fill), sr.dtype)
+            fn = make_distributed_batched_matvec(mesh, pm, sr, strategy,
+                                                 kernel=kern)
+            y = np.asarray(jax.jit(fn)(pm.parts, xs))
+            yf = pm.plan.unshard_output_batch(y)
+            np.testing.assert_allclose(
+                yf, oracle, rtol=1e-5,
+                err_msg=f"{sr.name}/{strategy}/{fmt}/{kern}/{balance}")
+            checked += 1
 print(f"BATCHED_DISTRIBUTED_OK {checked}")
 """
 
 
 @pytest.mark.slow
 def test_distributed_batched_matvec_8dev():
-    """[B, n]-block matvec over the Fig.-3 partitioning strategies: every
-    row must match the dense semiring oracle (the multi-query mesh path)."""
+    """[B, n]-block matvec over the Fig.-3 partitioning strategies × balance
+    modes: every row must match the dense semiring oracle (the multi-query
+    mesh path)."""
     env = dict(os.environ)
     env["PYTHONPATH"] = REPO_SRC + os.pathsep + env.get("PYTHONPATH", "")
     res = subprocess.run([sys.executable, "-c", BATCHED_WORKER], env=env,
                          capture_output=True, text=True, timeout=900)
     assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
-    assert "BATCHED_DISTRIBUTED_OK 12" in res.stdout, res.stdout
+    assert "BATCHED_DISTRIBUTED_OK 24" in res.stdout, res.stdout
+
+
+AUTO_WORKER = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.semiring import PLUS_TIMES
+from repro.graphs.datasets import rmat_graph, road_graph
+from repro.graphs.engine import edge_values
+from repro.graphs.multi import partitioned_matvec
+
+mesh = jax.make_mesh((2, 4), ("dr", "dc"))
+checked = 0
+for g in (rmat_graph(700, 5000, skew=0.6, seed=2),
+          road_graph(900, 2.6, seed=2)):
+    sr = PLUS_TIMES
+    rng = np.random.default_rng(0)
+    for spec, kern in [("auto", "spmv"), ("row:nnz", "spmv"),
+                       ("col", "spmspv"), ("2d:nnz", "spmspv")]:
+        pm, fn, choice = partitioned_matvec(g, sr, mesh, strategy=spec,
+                                            kernel=kern)
+        n_pad = pm.plan.shape[1]
+        dense = np.zeros((n_pad, n_pad), np.float32)
+        dense[g.cols, g.rows] = edge_values(g, sr, False, 0, False)
+        x = np.where(rng.random(n_pad) < 0.4, rng.random(n_pad), 0
+                     ).astype(np.float32)
+        xs = jnp.asarray(pm.plan.shard_input_vector(x, 0.0), sr.dtype)
+        y = pm.plan.unshard_output_vector(np.asarray(jax.jit(fn)(pm.parts, xs)))
+        np.testing.assert_allclose(y, dense @ x, rtol=1e-4,
+                                   err_msg=f"{g.name}/{spec}")
+        # the pick is never more skewed than the worst candidate it saw
+        worst = max(c["imbalance"] for c in choice.costs.values())
+        assert choice.plan.imbalance() <= worst + 1e-9
+        checked += 1
+print(f"AUTO_PLANNER_OK {checked}")
+"""
+
+
+@pytest.mark.slow
+def test_auto_planner_partitioned_matvec_8dev():
+    """graphs.multi.partitioned_matvec: the cost-model planner's auto pick
+    (and fixed strategy:balance specs) must run on the mesh and match the
+    dense oracle, with the chosen plan never more skewed than the worst
+    candidate."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = REPO_SRC + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run([sys.executable, "-c", AUTO_WORKER], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
+    assert "AUTO_PLANNER_OK 8" in res.stdout, res.stdout
 
 
 PIPELINE_WORKER = r"""

@@ -218,11 +218,13 @@ def test_flush_pipelining_equality(graph):
     """The pipelined flush drain (pipeline_depth > 0) must return results
     bit-identical to the sequential drain (depth 0) for a multi-bucket,
     multi-algorithm flood — the bucket pipeline moves host sync points,
-    never answers (ISSUE-3 acceptance)."""
+    never answers (ISSUE-3 acceptance).  The pipelined server also runs
+    with the partition planner's strategy="auto" (ISSUE-4 acceptance: the
+    planning decision never changes served answers)."""
     seq = GraphQueryServer(graph, batch_size=4, cache_capacity=0,
                            pipeline_depth=0)
     pip = GraphQueryServer(graph, batch_size=4, cache_capacity=0,
-                           pipeline_depth=3)
+                           pipeline_depth=3, strategy="auto")
     srcs = list(range(10))               # 3 buckets per algorithm
     for alg in ("bfs", "sssp", "ppr"):
         for s in srcs:
@@ -237,6 +239,29 @@ def test_flush_pipelining_equality(graph):
         for key, val in a.result.items():
             np.testing.assert_array_equal(np.asarray(val),
                                           np.asarray(b.result[key]))
+
+
+def test_partition_strategy_resolution(graph):
+    """strategy="auto" resolves through the cost-model planner at
+    construction; fixed specs pin strategy/balance; bad specs fail fast.
+    The choice is recorded but never enters the cache key (it cannot
+    change answers)."""
+    auto = GraphQueryServer(graph, strategy="auto")
+    assert auto.partition_choice.strategy in ("row", "col", "2d")
+    assert auto.partition_choice.balance in ("rows", "nnz")
+    # auto never picks a plan more skewed than the worst candidate
+    worst = max(c["imbalance"] for c in auto.partition_choice.costs.values())
+    assert auto.partition_choice.plan.imbalance() <= worst + 1e-9
+
+    fixed = GraphQueryServer(graph, strategy="row:nnz")
+    assert fixed.partition_choice.strategy == "row"
+    assert fixed.partition_choice.balance == "nnz"
+    assert fixed.engine_key == auto.engine_key   # not answer-shaping
+
+    with pytest.raises(ValueError):
+        GraphQueryServer(graph, strategy="diagonal")
+    with pytest.raises(ValueError):
+        GraphQueryServer(graph, strategy="row:fair")
 
 
 def test_mixed_algorithms_one_flush(server, graph):

@@ -145,24 +145,27 @@ for sr in (PLUS_TIMES, MIN_PLUS, BOOL_OR_AND, PLUS_AND):
                                          jnp.asarray(mask, sr.dtype)))
     for strategy, grid, fmt in [("row", (8, 1), "csr"), ("col", (1, 8), "csr"),
                                 ("2d", (2, 4), "coo")]:
-        pm = partition(rows, cols, v, (n, n), grid, fmt, sr)
-        bp = np.full((pm.shape[1], nrhs), sr.one, dtype=np.dtype(sr.dtype)); bp[:n] = b
-        mp = np.full((pm.shape[0], nrhs), fill, dtype=np.dtype(sr.dtype)); mp[:n] = mask
-        fn = make_distributed_spgemm(mesh, pm, sr, strategy)
-        c = np.asarray(jax.jit(fn)(pm.parts,
-                                   jnp.asarray(bp.reshape(8, -1, nrhs), sr.dtype),
-                                   jnp.asarray(mp.reshape(8, -1, nrhs), sr.dtype)))
-        np.testing.assert_allclose(c.reshape(-1, nrhs)[:n], oracle, rtol=1e-5,
-                                   err_msg=f"{sr.name}/{strategy}/{fmt}")
-        checked += 1
+        for balance in ("rows", "nnz"):
+            pm = partition(rows, cols, v, (n, n), grid, fmt, sr,
+                           balance=balance)
+            bs = jnp.asarray(pm.plan.shard_input_rows(b, sr.one), sr.dtype)
+            ms = jnp.asarray(pm.plan.shard_output_rows(mask, fill), sr.dtype)
+            fn = make_distributed_spgemm(mesh, pm, sr, strategy)
+            c = np.asarray(jax.jit(fn)(pm.parts, bs, ms))
+            cg = pm.plan.unshard_output_rows(c)
+            np.testing.assert_allclose(cg[:n], oracle, rtol=1e-5,
+                                       err_msg=f"{sr.name}/{strategy}/{fmt}/{balance}")
+            checked += 1
 print(f"DIST_SPGEMM_OK {checked}")
 """
 
 
 @pytest.mark.slow
 def test_distributed_spgemm_strategies():
+    """Masked SpGEMM over every strategy × balance mode: B rows shard via
+    the plan's input layout, masks/outputs via the output layout."""
     env = dict(os.environ, PYTHONPATH=REPO_SRC)
     out = subprocess.run([sys.executable, "-c", DIST_WORKER], env=env,
                          capture_output=True, text=True, timeout=600)
     assert out.returncode == 0, out.stderr[-2000:]
-    assert "DIST_SPGEMM_OK 12" in out.stdout
+    assert "DIST_SPGEMM_OK 24" in out.stdout

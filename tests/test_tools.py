@@ -1,0 +1,65 @@
+"""tools/check_links.py: relative-path AND #fragment-anchor validation
+(the ISSUE-4 satellite: fragments must match headings in the target
+markdown file, under GitHub's anchor slug rules)."""
+import importlib.util
+import pathlib
+
+TOOLS_DIR = pathlib.Path(__file__).resolve().parent.parent / "tools"
+
+
+def _check_links():
+    spec = importlib.util.spec_from_file_location(
+        "check_links", TOOLS_DIR / "check_links.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_github_slugs():
+    cl = _check_links()
+    seen = {}
+    assert cl.github_slug("Data partitioning & the planner", seen) == \
+        "data-partitioning--the-planner"
+    assert cl.github_slug("CI", seen) == "ci"
+    assert cl.github_slug("CI", seen) == "ci-1"          # duplicate headings
+    assert cl.github_slug("`code` *and* [link](x.md)", {}) == "code-and-link"
+
+
+def test_fragment_validation(tmp_path):
+    cl = _check_links()
+    target = tmp_path / "target.md"
+    target.write_text("# Title\n\n## Real Section\n\n```\n# not a heading\n```\n")
+    src = tmp_path / "src.md"
+    src.write_text(
+        "[ok](target.md#real-section)\n"
+        "[bad](target.md#missing-section)\n"
+        "[fenced](target.md#not-a-heading)\n"
+        "[nofrag](target.md)\n"
+        "[ext](https://example.com/page#whatever)\n")
+    bad = cl.broken_links(src, tmp_path)
+    assert [t for _, t in bad] == ["target.md#missing-section",
+                                   "target.md#not-a-heading"]
+
+
+def test_in_page_anchor_validation(tmp_path):
+    cl = _check_links()
+    md = tmp_path / "page.md"
+    md.write_text("# Top\n\n[up](#top)\n[nowhere](#nope)\n")
+    bad = cl.broken_links(md, tmp_path)
+    assert [t for _, t in bad] == ["#nope"]
+
+
+def test_missing_file_still_reported(tmp_path):
+    cl = _check_links()
+    md = tmp_path / "page.md"
+    md.write_text("[gone](absent.md#whatever)\n")
+    assert [t for _, t in cl.broken_links(md, tmp_path)] == \
+        ["absent.md#whatever"]
+
+
+def test_repo_docs_have_no_broken_links():
+    """The CI docs job, in-process: README + docs must stay clean."""
+    cl = _check_links()
+    root = TOOLS_DIR.parent
+    for md in [root / "README.md", *sorted((root / "docs").rglob("*.md"))]:
+        assert cl.broken_links(md, root) == [], md

@@ -4,8 +4,11 @@
 
 Arguments are markdown files or directories (scanned for *.md). For every
 inline link/image `[text](target)`, a relative target must resolve to an
-existing file or directory (an optional `#fragment` is stripped; external
-schemes and pure in-page anchors are skipped). Exit 1 listing every broken
+existing file or directory, and a `#fragment` pointing into a markdown
+file (the target's, or this file's for pure in-page `#...` anchors) must
+match one of that file's headings under GitHub's anchor slug rules
+(lowercase, punctuation stripped, spaces → hyphens, duplicates suffixed
+-1, -2, ...). External schemes are skipped. Exit 1 listing every broken
 link, 0 otherwise.
 """
 from __future__ import annotations
@@ -17,6 +20,35 @@ import sys
 # inline links/images; [text](target "title") keeps only the target
 _LINK = re.compile(r"!?\[[^\]]*\]\(\s*<?([^)<>\s]+)>?(?:\s+\"[^\"]*\")?\s*\)")
 _SKIP = ("http://", "https://", "mailto:", "ftp://")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$")
+_MD_STRIP = re.compile(r"(`+|\*+|_{2,}|!?\[([^\]]*)\]\([^)]*\))")
+
+
+def github_slug(heading: str, seen: dict[str, int]) -> str:
+    """GitHub's heading → anchor id: inline markup dropped, lowercased,
+    punctuation removed, spaces hyphenated; repeats get -1, -2, ..."""
+    text = _MD_STRIP.sub(lambda m: m.group(2) or "", heading).strip().lower()
+    slug = re.sub(r"[^\w\- ]", "", text, flags=re.UNICODE).replace(" ", "-")
+    n = seen.get(slug, 0)
+    seen[slug] = n + 1
+    return slug if n == 0 else f"{slug}-{n}"
+
+
+def heading_anchors(md: pathlib.Path) -> set[str]:
+    """All anchor ids the markdown file's headings define."""
+    seen: dict[str, int] = {}
+    anchors = set()
+    in_fence = False
+    for line in md.read_text().splitlines():
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = _HEADING.match(line)
+        if m:
+            anchors.add(github_slug(m.group(1), seen))
+    return anchors
 
 
 def md_files(args: list[str]) -> list[pathlib.Path]:
@@ -34,12 +66,22 @@ def md_files(args: list[str]) -> list[pathlib.Path]:
 
 def broken_links(md: pathlib.Path, root: pathlib.Path) -> list[tuple[int, str]]:
     bad = []
+    anchor_cache: dict[pathlib.Path, set[str]] = {}
+
+    def anchors_of(path: pathlib.Path) -> set[str]:
+        if path not in anchor_cache:
+            anchor_cache[path] = heading_anchors(path)
+        return anchor_cache[path]
+
     for lineno, line in enumerate(md.read_text().splitlines(), start=1):
         for target in _LINK.findall(line):
-            if target.startswith(_SKIP) or target.startswith("#"):
+            if target.startswith(_SKIP):
                 continue
-            path = target.split("#", 1)[0]
+            path, _, fragment = target.partition("#")
             if not path:
+                # pure in-page anchor: validate against this file's headings
+                if fragment and fragment not in anchors_of(md):
+                    bad.append((lineno, target))
                 continue
             if path.startswith("/"):
                 # GitHub-style root-absolute link: repo-root-relative
@@ -51,6 +93,10 @@ def broken_links(md: pathlib.Path, root: pathlib.Path) -> list[tuple[int, str]]:
                     # badge): nothing in the working tree to validate
                     continue
             if not resolved.exists():
+                bad.append((lineno, target))
+            elif (fragment and resolved.suffix == ".md"
+                  and fragment not in anchors_of(resolved)):
+                # the file exists but the #fragment matches no heading
                 bad.append((lineno, target))
     return bad
 

@@ -1,0 +1,103 @@
+"""CI bench-regression gate: diff a benchmark --json dump against the
+committed baseline (benchmarks/baseline.json).
+
+    python tools/compare_bench.py bench-quick.json \
+        [--baseline benchmarks/baseline.json] [--update-baseline]
+
+Only **correctness/row-structure** fields are compared — the set of
+(bench, case) row names and any ``checksum`` field — never timings:
+the CI runners are 2-core shared machines, so wall-clock numbers are
+noise by design (they are uploaded as artifacts instead).  The gate
+fails when
+
+* a baseline row is missing from the current dump (a benchmark, family,
+  or strategy silently dropped out of the suite), or
+* a row's result checksum changed (the computed answers drifted).
+
+New rows in the current dump pass (adding benchmarks never breaks the
+gate) but are reported, with a reminder to re-baseline.  After an
+intentional change, regenerate with ``--update-baseline`` and commit the
+result (see README § CI).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+DEFAULT_BASELINE = pathlib.Path(__file__).resolve().parent.parent \
+    / "benchmarks" / "baseline.json"
+
+
+def row_key(row: dict) -> tuple[str, str]:
+    return (str(row.get("bench", "")), str(row.get("case", "")))
+
+
+def reduce_rows(rows: list[dict]) -> list[dict]:
+    """Strip rows down to the compared structure: names + checksums."""
+    out = []
+    for row in sorted(rows, key=row_key):
+        slim = {"bench": row.get("bench", ""), "case": row.get("case", "")}
+        if "checksum" in row:
+            slim["checksum"] = str(row["checksum"])
+        out.append(slim)
+    return out
+
+
+def compare(current: list[dict], baseline: list[dict]) -> list[str]:
+    """Return the failure list (empty = gate passes)."""
+    cur = {row_key(r): r for r in reduce_rows(current)}
+    failures = []
+    for ref in reduce_rows(baseline):
+        key = row_key(ref)
+        got = cur.get(key)
+        if got is None:
+            failures.append(f"missing row: {key[0]},{key[1]}")
+        elif "checksum" in ref and got.get("checksum") != ref["checksum"]:
+            failures.append(
+                f"checksum changed: {key[0]},{key[1]}: "
+                f"{ref['checksum']} -> {got.get('checksum')}")
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="benchmarks.run --json output to check")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE))
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from the current rows")
+    args = ap.parse_args(argv)
+
+    current = json.loads(pathlib.Path(args.current).read_text())
+    baseline_path = pathlib.Path(args.baseline)
+
+    if args.update_baseline:
+        baseline_path.write_text(
+            json.dumps({"rows": reduce_rows(current)}, indent=2) + "\n")
+        print(f"compare_bench: wrote {len(current)} rows "
+              f"({len(reduce_rows(current))} reduced) to {baseline_path}")
+        return 0
+
+    if not baseline_path.is_file():
+        print(f"compare_bench: no baseline at {baseline_path}; "
+              f"run with --update-baseline and commit it")
+        return 1
+    baseline = json.loads(baseline_path.read_text())["rows"]
+    failures = compare(current, baseline)
+    for f in failures:
+        print(f"compare_bench: FAIL {f}")
+    known = {row_key(r) for r in baseline}
+    new = [row_key(r) for r in reduce_rows(current) if row_key(r) not in known]
+    if new:
+        print(f"compare_bench: {len(new)} new row(s) not in the baseline "
+              f"(ok — re-baseline with --update-baseline to gate them):")
+        for key in new[:20]:
+            print(f"  new row: {key[0]},{key[1]}")
+    print(f"compare_bench: {len(baseline)} baseline rows, "
+          f"{len(failures)} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
