@@ -22,6 +22,7 @@ MODULES = [
     "fig6_spmv_vs_spmspv",
     "fig7_adaptive_e2e",
     "fig8_scaling",
+    "dynamic_updates",
     "partition_balance",
     "phases",
     "pipeline_overlap",

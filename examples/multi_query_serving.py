@@ -38,8 +38,9 @@ def main():
         srv.submit("sssp", int(s))
 
     done = srv.flush()
-    print(f"flush 1: {len(done)} queries -> {srv.stats['batches']} engine "
-          f"batches (deduped {srv.stats['deduped']})")
+    stats = srv.stats()
+    print(f"flush 1: {len(done)} queries -> {stats['batches']} engine "
+          f"batches (deduped {stats['deduped']})")
 
     # the second wave of the same hot sources never touches the engine
     for s in hot:
@@ -52,7 +53,16 @@ def main():
     reached = int((r.result["levels"] >= 0).sum())
     print(f"sample bfs(source={r.source}): reached {reached}/{g.n} vertices "
           f"in {r.result['iterations']} levels")
-    print("stats:", srv.stats)
+
+    # live mutation: stream an edge batch in; only affected entries drop
+    from repro.core.delta import EdgeDelta
+    ins = rng.integers(0, g.n, (8, 2))
+    report = srv.mutate(EdgeDelta(insert_rows=ins[:, 0],
+                                  insert_cols=ins[:, 1]))
+    print(f"mutate -> v{report['version']}: +{report['inserted']} edges, "
+          f"cache retained {report['retained']} / "
+          f"invalidated {report['invalidated']}")
+    print("stats:", srv.stats())
 
 
 if __name__ == "__main__":

@@ -221,6 +221,72 @@ class PartitionPlan:
             return 1.0
         return max(self.tile_nnz) / (total / self.n_devices)
 
+    def _rank_cached(self, axis: str, idx: np.ndarray) -> np.ndarray:
+        """Original indices → plan-space positions, with the O(n) inverse
+        permutation of a block-cyclic axis built once and memoized on the
+        (immutable) plan — tiles_of/apply_delta stay O(|edges|) per call
+        instead of paying a full-axis scatter every delta."""
+        order = self.row_order if axis == "row" else self.col_order
+        if order is None:
+            return idx
+        attr = f"_{axis}_rank"
+        rank = self.__dict__.get(attr)
+        if rank is None:
+            m = self.shape[0] if axis == "row" else self.shape[1]
+            rank = np.empty(m, np.int64)
+            rank[order] = np.arange(m, dtype=np.int64)
+            object.__setattr__(self, attr, rank)
+        return rank[idx]
+
+    def tiles_of(self, rows: np.ndarray, cols: np.ndarray) -> np.ndarray:
+        """Device tile id (row-major over the grid) of each edge under
+        this plan's cuts — O(|edges| · log bands), no global recount."""
+        r_parts, c_parts = self.grid
+        rows = np.asarray(rows, np.int64)
+        cols = np.asarray(cols, np.int64)
+        tr = np.searchsorted(np.asarray(self.row_starts),
+                             self._rank_cached("row", rows),
+                             side="right") - 1
+        tc = np.searchsorted(np.asarray(self.col_starts),
+                             self._rank_cached("col", cols),
+                             side="right") - 1
+        return tr * c_parts + tc
+
+    def apply_delta(self, ins_rows: np.ndarray, ins_cols: np.ndarray,
+                    del_rows: np.ndarray, del_cols: np.ndarray
+                    ) -> "PartitionPlan":
+        """Incremental plan repair: the band cuts stay, only the per-tile
+        nnz book-keeping is patched — and only for the tiles the delta's
+        edges actually land in, costing O(|delta|) instead of the O(nnz)
+        global recount a fresh plan pays. The caller passes the
+        *effective* delta (edges that actually appeared/disappeared, see
+        core.delta.edge_diff); a delete for an edge the plan never
+        counted would drive a tile negative and asserts loudly.
+
+        Repeated deltas drift the cuts away from the degree histogram
+        they were optimized for; graphs/cost_model.py:repair_choice
+        watches ``imbalance()`` on the patched plan and triggers a full
+        replan when it drifts past threshold."""
+        counts = np.asarray(self.tile_nnz, np.int64).copy()
+        n_tiles = counts.shape[0]
+        if len(ins_rows):
+            counts += np.bincount(self.tiles_of(ins_rows, ins_cols),
+                                  minlength=n_tiles)
+        if len(del_rows):
+            counts -= np.bincount(self.tiles_of(del_rows, del_cols),
+                                  minlength=n_tiles)
+        assert counts.min(initial=0) >= 0, (
+            "plan delta deletes edges the plan never counted — pass the "
+            "effective delta (core.delta.edge_diff)")
+        patched = dataclasses.replace(
+            self, tile_nnz=tuple(int(v) for v in counts))
+        # carry the memoized inverse permutations (orders are shared and
+        # immutable) so a chain of repairs never re-pays the O(n) scatter
+        for attr in ("_row_rank", "_col_rank"):
+            if attr in self.__dict__:
+                object.__setattr__(patched, attr, self.__dict__[attr])
+        return patched
+
     # -- band → original-index maps ------------------------------------
     @staticmethod
     def _index_map(starts, order, bands: int, pieces: int, per: int):

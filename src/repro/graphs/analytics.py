@@ -53,13 +53,20 @@ class CCResult(NamedTuple):
     iterations: Array    # scalar int32
 
 
-def connected_components(engine: GraphEngine, max_iters: int | None = None
-                         ) -> CCResult:
+def connected_components(engine: GraphEngine, max_iters: int | None = None,
+                         labels0=None) -> CCResult:
     """Min-label propagation: every vertex starts labelled with its own id
     (1-based: ⟨min,×⟩ operands must stay strictly positive) and repeatedly
     ⊕-absorbs its neighbours' labels. Converges in O(diameter) rounds to
     the component minimum. Labels stay dense, so the SpMV kernel runs every
-    round — no adaptive switch, the opposite regime from BFS."""
+    round — no adaptive switch, the opposite regime from BFS.
+
+    ``labels0`` seeds the flood with 0-based labels ([n_true] ints) instead
+    of each vertex's own id — the incremental label-repair path of
+    graphs/dynamic.py. The seed must be pointwise ≥ the true component
+    minima with every merged region reset to own ids (min-flooding only
+    lowers labels); then the fixpoint is the exact cold-start answer in
+    however many rounds the repaired region's diameter needs."""
     sr = engine.sr
     assert sr.name == MIN_TIMES.name, sr.name
     n, n_true = engine.n, engine.n_true
@@ -68,7 +75,12 @@ def connected_components(engine: GraphEngine, max_iters: int | None = None
     assert n_true <= 2 ** 24, f"float32 labels cap CC at 2^24 vertices, got {n_true}"
     max_iters = max_iters or n_true
 
-    l0 = jnp.arange(1, n_true + 1, dtype=sr.dtype)
+    if labels0 is None:
+        l0 = jnp.arange(1, n_true + 1, dtype=sr.dtype)
+    else:
+        seed = np.asarray(labels0)
+        assert seed.shape == (n_true,), seed.shape
+        l0 = jnp.asarray(seed + 1, sr.dtype)
     l0 = jnp.pad(l0, (0, n - n_true), constant_values=sr.zero)
 
     def cond(state):

@@ -199,3 +199,36 @@ def plan_for_graph(graph, n_devices: int = 8,
                             n_devices=n_devices, grid2d=grid2d,
                             kernel=kernel, frontier_density=frontier_density,
                             strategies=strategies, balances=balances)
+
+
+def repair_choice(choice: PlannerChoice, graph, delta,
+                  n_devices: int = 8,
+                  grid2d: Tuple[int, int] | None = None,
+                  kernel: str = "spmv", frontier_density: float = 1.0,
+                  strategies=STRATEGIES, balances=BALANCES,
+                  max_imbalance: float = 1.5
+                  ) -> Tuple[PlannerChoice, bool]:
+    """Incremental replan check after one *effective* edge delta
+    (core.delta.edge_diff output — every listed edge really changed):
+    patch the chosen plan's per-tile nnz in O(|delta|)
+    (:meth:`~repro.core.partition.PartitionPlan.apply_delta`, transposed
+    like the plan itself) and keep the cuts — unless the patched
+    imbalance has drifted past ``max_imbalance``, in which case the full
+    planner reruns over ``graph`` (the *new* snapshot) and may change
+    strategy/balance entirely. Returns ``(choice, replanned)``; the
+    patched fast path refreshes the chosen candidate's cost-table entry
+    so reported costs track the live nnz distribution."""
+    patched = choice.plan.apply_delta(
+        delta.insert_cols, delta.insert_rows,    # transposed adjacency
+        delta.delete_cols, delta.delete_rows)
+    if patched.imbalance() > max_imbalance:
+        return plan_for_graph(graph, n_devices=n_devices, grid2d=grid2d,
+                              kernel=kernel,
+                              frontier_density=frontier_density,
+                              strategies=strategies,
+                              balances=balances), True
+    costs = dict(choice.costs)
+    costs[(choice.strategy, choice.balance)] = estimate_phase_costs(
+        patched, choice.strategy, kernel, frontier_density)
+    return PlannerChoice(strategy=choice.strategy, balance=choice.balance,
+                         grid=choice.grid, plan=patched, costs=costs), False

@@ -15,6 +15,7 @@ Generator fidelity is asserted in tests/test_graphs.py (avg degree within
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 
 import numpy as np
 
@@ -71,6 +72,23 @@ class Graph:
 
     def features(self) -> GraphFeatures:
         return GraphFeatures.from_degrees(self.out_degrees())
+
+    def fingerprint(self) -> str:
+        """Content hash of the edge structure, computed once per instance
+        and memoized (the serving layer builds a cache key from it on
+        every submit — rehashing full edge arrays there was the hot-path
+        cost). Graphs are immutable snapshots by convention (enforced
+        nowhere, relied on everywhere): edit edges by building a new
+        Graph — e.g. graphs/dynamic.py applying an EdgeDelta — never in
+        place after the first fingerprint call."""
+        fp = self.__dict__.get("_fingerprint")
+        if fp is None:
+            h = hashlib.sha1()
+            h.update(np.int64(self.n).tobytes())
+            h.update(np.ascontiguousarray(self.rows, np.int64).tobytes())
+            h.update(np.ascontiguousarray(self.cols, np.int64).tobytes())
+            fp = self.__dict__["_fingerprint"] = h.hexdigest()[:16]
+        return fp
 
 
 def _dedup(rows: np.ndarray, cols: np.ndarray, n: int):

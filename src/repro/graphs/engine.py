@@ -79,13 +79,36 @@ class GraphEngine:
         raise ValueError(policy)
 
 
+def content_keyed_weights(rows: np.ndarray, cols: np.ndarray,
+                          seed: int = 0) -> np.ndarray:
+    """Deterministic per-edge weights in {1..9} keyed on the edge's
+    *endpoints* (splitmix-style integer hash), not its position in the
+    edge list. Positional weights (the legacy rng draw) reshuffle on any
+    edge insert/delete, which would invalidate every cached SSSP answer
+    and every warm-start state on every delta; content-keyed weights keep
+    untouched edges' weights stable across snapshots — the property the
+    streaming-update stack (graphs/dynamic.py, serve mutate) requires."""
+    seed_mix = np.uint64((seed * 0xD6E8FEB86659FD93) % (1 << 64))
+    h = (np.asarray(rows, np.uint64) * np.uint64(0x9E3779B97F4A7C15)
+         ^ np.asarray(cols, np.uint64) * np.uint64(0xC2B2AE3D27D4EB4F)
+         ^ seed_mix)
+    h ^= h >> np.uint64(33)
+    h *= np.uint64(0xFF51AFD7ED558CCD)
+    h ^= h >> np.uint64(29)
+    return (1 + (h % np.uint64(9))).astype(np.float32)
+
+
 def edge_values(g: Graph, sr: Semiring, weighted: bool, seed: int = 0,
-                normalize: bool = False) -> np.ndarray:
-    rng = np.random.default_rng(seed)
+                normalize: bool = False,
+                content_keyed: bool = False) -> np.ndarray:
     if sr.name == "bool_or_and":
         return np.ones(g.nnz, np.int32)
     if weighted:
-        vals = rng.integers(1, 10, g.nnz).astype(np.float32)
+        if content_keyed:
+            vals = content_keyed_weights(g.rows, g.cols, seed)
+        else:
+            rng = np.random.default_rng(seed)
+            vals = rng.integers(1, 10, g.nnz).astype(np.float32)
     else:
         vals = np.ones(g.nnz, np.float32)
     if normalize:  # column-stochastic for PPR: weight(u→v) = 1/outdeg(u)
@@ -97,11 +120,15 @@ def edge_values(g: Graph, sr: Semiring, weighted: bool, seed: int = 0,
 def build_engine(g: Graph, sr: Semiring, stump: DecisionStump | None = None,
                  fmt_spmv: str = "csr", fmt_spmspv: str = "csc",
                  weighted: bool = False, normalize: bool = False,
-                 seed: int = 0, f_max: int | None = None) -> GraphEngine:
+                 seed: int = 0, f_max: int | None = None,
+                 content_keyed: bool = False) -> GraphEngine:
     """Build single-device closures over the *transposed* adjacency
-    (traversals compute y = Aᵀ ⊕.⊗ x: pull from in-neighbours)."""
+    (traversals compute y = Aᵀ ⊕.⊗ x: pull from in-neighbours).
+    ``content_keyed`` swaps the positional weight draw for endpoint-hash
+    weights (see :func:`content_keyed_weights`) so engines built on
+    successive delta snapshots agree on every surviving edge."""
     stump = stump or DecisionStump()
-    vals = edge_values(g, sr, weighted, seed, normalize)
+    vals = edge_values(g, sr, weighted, seed, normalize, content_keyed)
     # transpose: swap row/col
     rows, cols = g.cols.astype(np.int32), g.rows.astype(np.int32)
     shape = (g.n, g.n)

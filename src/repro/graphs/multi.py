@@ -133,6 +133,50 @@ def make_bfs_multi(engine: GraphEngine, batch: int, max_iters: int = 64,
     return jax.jit(run)
 
 
+def _relax_block(engine: GraphEngine, step, policy: str, max_iters: int,
+                 dist: Array, changed: Array) -> SSSPBatchResult:
+    """The ⟨min,+⟩ re-relaxation loop over a [B, n] state block, shared by
+    the cold-start SSSP runner and the warm-start resume runner: relax
+    only from rows' ``changed`` frontiers until no distance improves.
+    Any (dist, changed) with dist ≥ the true fixpoint pointwise and every
+    possible improvement reachable from a changed vertex converges to the
+    exact fixpoint — the property graphs/dynamic.py's incremental
+    recompute is built on."""
+    sr = engine.sr
+    b = dist.shape[0]
+
+    def cond(state):
+        _di, _ch, it, done, _its, _d, _k = state
+        return (~jnp.all(done)) & (it < max_iters)
+
+    def body(state):
+        dist, changed, it, done, iters, dens, kern = state
+        active = ~done
+        density = density_of_batch(changed, sr, engine.n_true)
+        used = _kernel_codes(policy, density, engine.threshold)
+        cand = step(changed, density)
+        new_dist = jnp.minimum(dist, cand)
+        new_changed = jnp.where(new_dist < dist, new_dist, jnp.inf)
+        new_dist = jnp.where(active[:, None], new_dist, dist)
+        new_changed = jnp.where(active[:, None], new_changed,
+                                jnp.full_like(new_changed, jnp.inf))
+        newly_done = jnp.sum((new_changed != jnp.inf).astype(jnp.int32),
+                             axis=1) == 0
+        iters = jnp.where(active, it + 1, iters)
+        dens = _masked_trace_update(dens, it, active, density)
+        kern = _masked_trace_update(kern, it, active, used)
+        return (new_dist, new_changed, it + 1, done | newly_done,
+                iters, dens, kern)
+
+    state0 = (dist, changed, jnp.asarray(0, jnp.int32),
+              jnp.zeros((b,), bool), jnp.zeros((b,), jnp.int32),
+              jnp.full((b, max_iters), -1.0, jnp.float32),
+              jnp.full((b, max_iters), -1, jnp.int32))
+    dist, _ch, _it, _done, iters, dens, kern = jax.lax.while_loop(
+        cond, body, state0)
+    return SSSPBatchResult(dist[:, : engine.n_true], iters, dens, kern)
+
+
 def make_sssp_multi(engine: GraphEngine, batch: int, max_iters: int = 64,
                     policy: str = "adaptive", mesh: Mesh | None = None,
                     axis_name: str = "batch"
@@ -150,37 +194,34 @@ def make_sssp_multi(engine: GraphEngine, batch: int, max_iters: int = 64,
                            ).at[rows, sources].set(0.0)
         dist = _constrain_block(dist, mesh, axis_name)
         changed = _constrain_block(changed, mesh, axis_name)
+        return _relax_block(engine, step, policy, max_iters, dist, changed)
 
-        def cond(state):
-            _di, _ch, it, done, _its, _d, _k = state
-            return (~jnp.all(done)) & (it < max_iters)
+    return jax.jit(run)
 
-        def body(state):
-            dist, changed, it, done, iters, dens, kern = state
-            active = ~done
-            density = density_of_batch(changed, sr, engine.n_true)
-            used = _kernel_codes(policy, density, engine.threshold)
-            cand = step(changed, density)
-            new_dist = jnp.minimum(dist, cand)
-            new_changed = jnp.where(new_dist < dist, new_dist, jnp.inf)
-            new_dist = jnp.where(active[:, None], new_dist, dist)
-            new_changed = jnp.where(active[:, None], new_changed,
-                                    jnp.full_like(new_changed, jnp.inf))
-            newly_done = jnp.sum((new_changed != jnp.inf).astype(jnp.int32),
-                                 axis=1) == 0
-            iters = jnp.where(active, it + 1, iters)
-            dens = _masked_trace_update(dens, it, active, density)
-            kern = _masked_trace_update(kern, it, active, used)
-            return (new_dist, new_changed, it + 1, done | newly_done,
-                    iters, dens, kern)
 
-        state0 = (dist, changed, jnp.asarray(0, jnp.int32),
-                  jnp.zeros((b,), bool), jnp.zeros((b,), jnp.int32),
-                  jnp.full((b, max_iters), -1.0, jnp.float32),
-                  jnp.full((b, max_iters), -1, jnp.int32))
-        dist, _ch, _it, _done, iters, dens, kern = jax.lax.while_loop(
-            cond, body, state0)
-        return SSSPBatchResult(dist[:, : engine.n_true], iters, dens, kern)
+def make_relax_multi(engine: GraphEngine, batch: int, max_iters: int = 64,
+                     policy: str = "adaptive", mesh: Mesh | None = None,
+                     axis_name: str = "batch"
+                     ) -> Callable[[Array, Array], SSSPBatchResult]:
+    """Build a jitted warm-start runner: (dist0, changed0) [B, n_true]
+    f32 blocks -> SSSPBatchResult. Seeding ``dist0`` = previous distances
+    with stale entries reset to +inf and ``changed0`` = the delta frontier
+    (finite only where re-relaxation must start) is the incremental
+    BFS/SSSP path of graphs/dynamic.py; seeding the cold start
+    (source rows 0, rest +inf) reproduces :func:`make_sssp_multi`
+    bit-for-bit — same loop, same ops (tests/test_multi_query.py)."""
+    sr = engine.sr
+    assert sr.name == MIN_PLUS.name
+    n = engine.n
+    step = engine.batch_step_fn(policy)
+
+    def run(dist0: Array, changed0: Array) -> SSSPBatchResult:
+        pad = ((0, 0), (0, n - dist0.shape[1]))
+        dist = jnp.pad(dist0, pad, constant_values=jnp.inf)
+        changed = jnp.pad(changed0, pad, constant_values=jnp.inf)
+        dist = _constrain_block(dist, mesh, axis_name)
+        changed = _constrain_block(changed, mesh, axis_name)
+        return _relax_block(engine, step, policy, max_iters, dist, changed)
 
     return jax.jit(run)
 
@@ -232,7 +273,7 @@ def make_ppr_multi(engine: GraphEngine, batch: int, alpha: float = 0.85,
 
 
 _MAKERS = {"bfs": make_bfs_multi, "sssp": make_sssp_multi,
-           "ppr": make_ppr_multi}
+           "ppr": make_ppr_multi, "relax": make_relax_multi}
 
 
 def _cached_runner(engine: GraphEngine, alg: str, batch: int, mesh,
@@ -271,6 +312,22 @@ def sssp_multi(engine: GraphEngine, sources, max_iters: int = 64,
     run = _cached_runner(engine, "sssp", int(src.shape[0]), mesh, axis_name,
                          max_iters=max_iters, policy=policy)
     return run(src)
+
+
+def relax_multi(engine: GraphEngine, dist0, changed0, max_iters: int = 64,
+                policy: str = "adaptive", mesh: Mesh | None = None,
+                axis_name: str = "batch") -> SSSPBatchResult:
+    """Warm-start ⟨min,+⟩ re-relaxation from explicit [B, n_true] state
+    blocks (the delta-frontier path of graphs/dynamic.py): ``dist0`` holds
+    the surviving distances (+inf where stale or unknown), ``changed0``
+    the seed frontier (+inf everywhere relaxation need not start). Runs
+    the exact loop of :func:`sssp_multi` on the cached per-batch runner."""
+    d0 = jnp.asarray(np.asarray(dist0, np.float32))
+    c0 = jnp.asarray(np.asarray(changed0, np.float32))
+    assert d0.ndim == 2 and d0.shape == c0.shape, (d0.shape, c0.shape)
+    run = _cached_runner(engine, "relax", int(d0.shape[0]), mesh, axis_name,
+                         max_iters=max_iters, policy=policy)
+    return run(d0, c0)
 
 
 def traverse_multi_buckets(engine: GraphEngine, alg: str, buckets,

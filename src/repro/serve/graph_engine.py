@@ -40,25 +40,36 @@ Serving-side optimizations:
   strictly sequential drain with bit-identical results (it never enters
   cache keys — only host sync order changes, never answers).
 
+* **live mutation** — ``mutate(delta)`` applies a batched edge delta
+  (core.delta.EdgeDelta) and advances the server to a new immutable
+  snapshot epoch: queued requests drain first against the pre-mutation
+  snapshot, the version bumps, and the LRU **selectively invalidates** —
+  entries whose cached payloads prove the delta cannot reach them (every
+  touched vertex unreached from their source) migrate to the new
+  fingerprint instead of dying in an all-or-nothing flush. ``stats()``
+  exposes the retained/invalidated split plus the cache's
+  hit/miss/eviction counters, so the win is measurable, not asserted.
+
 A ``mesh`` row-shards each [B, n] traversal block over devices (queries are
 independent), which is how one server saturates an 8-device host.
 """
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.adaptive import DecisionStump
+from repro.core.delta import apply_edge_delta, edge_diff, touched_vertices
 from repro.core.semiring import BOOL_OR_AND, MIN_PLUS, MIN_TIMES, PLUS_TIMES
 from repro.graphs.analytics import (
     connected_components, kcore, triangle_count, triangle_reference,
 )
 from repro.graphs.cost_model import (
-    candidate_space, parse_strategy, plan_for_graph, trained_stump,
+    candidate_space, parse_strategy, plan_for_graph, repair_choice,
+    trained_stump,
 )
 from repro.graphs.datasets import Graph
 from repro.graphs.engine import GraphEngine, build_engine
@@ -72,12 +83,10 @@ GLOBAL = -1  # source sentinel for global (whole-graph) requests
 
 def graph_fingerprint(graph: Graph) -> str:
     """Content hash of the graph's edge structure (not its object identity:
-    a rebuilt-but-identical graph hits the same cache entries)."""
-    h = hashlib.sha1()
-    h.update(np.int64(graph.n).tobytes())
-    h.update(np.ascontiguousarray(graph.rows, dtype=np.int64).tobytes())
-    h.update(np.ascontiguousarray(graph.cols, dtype=np.int64).tobytes())
-    return h.hexdigest()[:16]
+    a rebuilt-but-identical graph hits the same cache entries). Memoized
+    per Graph instance (datasets.Graph.fingerprint) — the submit hot path
+    builds cache keys from it and must not rehash full edge arrays."""
+    return graph.fingerprint()
 
 
 @dataclasses.dataclass
@@ -95,13 +104,17 @@ class GraphRequest:
 class LRUCache:
     """Bounded (engine_key, algorithm, source) -> result-dict map, LRU
     eviction. The engine_key component makes the cache safe to share
-    across servers / graphs / rebuilt engines."""
+    across servers / graphs / rebuilt engines. Counts hits / misses /
+    capacity evictions (``stats()``) so the serving layer can *prove*
+    cache behaviour — e.g. that a mutate() preserved entries — instead of
+    asserting it."""
 
     def __init__(self, capacity: int):
         self.capacity = capacity
         self._d: OrderedDict[Tuple[str, str, int], Dict[str, Any]] = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def __len__(self) -> int:
         return len(self._d)
@@ -121,6 +134,33 @@ class LRUCache:
         self._d.move_to_end(key)
         while len(self._d) > self.capacity:
             self._d.popitem(last=False)
+            self.evictions += 1
+
+    def migrate(self, old_prefix: str, new_prefix: str,
+                keep) -> Tuple[int, int]:
+        """Selective invalidation for one engine epoch: every entry keyed
+        under ``old_prefix`` either re-keys to ``new_prefix`` (when
+        ``keep(algorithm, source, value)`` vouches its payload is still
+        exact) or drops. Recency order is preserved; entries under other
+        prefixes (a shared cache serving other graphs) are untouched.
+        Returns (retained, invalidated)."""
+        retained = invalidated = 0
+        moved: OrderedDict[Tuple[str, str, int], Dict[str, Any]] = OrderedDict()
+        for key, value in self._d.items():
+            if key[0] != old_prefix:
+                moved[key] = value
+            elif keep(key[1], key[2], value):
+                moved[(new_prefix,) + key[1:]] = value
+                retained += 1
+            else:
+                invalidated += 1
+        self._d = moved
+        return retained, invalidated
+
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "size": len(self._d),
+                "capacity": self.capacity}
 
 
 class GraphQueryServer:
@@ -163,19 +203,39 @@ class GraphQueryServer:
         self._strategy, self._balance = parse_strategy(strategy)
         self._partition_choice = None
         self.cache = cache if cache is not None else LRUCache(cache_capacity)
-        # Everything that changes answers must be in the cache key: the
-        # graph's edge content plus the engine-shaping parameters — the
-        # stump included, since it moves the adaptive switch point and
-        # with it the kernels' float accumulation order.
-        stump_key = (f"{self.stump.feature}:{self.stump.threshold:g}:"
-                     f"{self.stump.left_class}:{self.stump.right_class}")
-        self.engine_key = (f"{graph_fingerprint(graph)}"
-                           f"/w{weight_seed}/a{alpha}/i{max_iters}/{policy}"
-                           f"/s{stump_key}")
+        # Monotonic snapshot epoch: mutate() bumps it with every applied
+        # delta batch, giving (version, fingerprint) the ordering a pure
+        # content hash lacks.
+        self.version = 0
+        self.engine_key = self._engine_key_for(graph)
         self._engines: Dict[str, GraphEngine] = {}
         self._queue: List[GraphRequest] = []
-        self.stats = {"submitted": 0, "served": 0, "cache_hits": 0,
-                      "deduped": 0, "batches": 0, "global_runs": 0}
+        self.counters = {"submitted": 0, "served": 0, "cache_hits": 0,
+                         "deduped": 0, "batches": 0, "global_runs": 0,
+                         "mutations": 0, "edges_inserted": 0,
+                         "edges_deleted": 0, "entries_retained": 0,
+                         "entries_invalidated": 0, "plan_repairs": 0,
+                         "plan_replans": 0}
+
+    def _engine_key_for(self, graph: Graph) -> str:
+        """Cache-key prefix for one graph snapshot under this server's
+        engine parameters. Everything that changes answers must be in it:
+        the graph's edge content plus the engine-shaping parameters — the
+        stump included, since it moves the adaptive switch point and with
+        it the kernels' float accumulation order."""
+        stump_key = (f"{self.stump.feature}:{self.stump.threshold:g}:"
+                     f"{self.stump.left_class}:{self.stump.right_class}")
+        return (f"{graph_fingerprint(graph)}"
+                f"/w{self.weight_seed}/a{self.alpha}/i{self.max_iters}"
+                f"/{self.policy}/s{stump_key}")
+
+    def stats(self) -> Dict[str, Any]:
+        """One coherent counter snapshot: the server's serving/mutation
+        counters, the current snapshot version, and the LRU's
+        hit/miss/eviction accounting (shared caches aggregate across
+        servers)."""
+        return {**self.counters, "version": self.version,
+                "cache": self.cache.stats()}
 
     # ------------------------------------------------------------------
     def engine(self, algorithm: str) -> GraphEngine:
@@ -189,8 +249,12 @@ class GraphQueryServer:
             if algorithm == "bfs":
                 eng = build_engine(g, BOOL_OR_AND, stump)
             elif algorithm == "sssp":
+                # content-keyed weights: a delta snapshot keeps every
+                # surviving edge's weight, which is what lets mutate()
+                # carry unaffected cached SSSP answers across versions
                 eng = build_engine(g, MIN_PLUS, stump, weighted=True,
-                                   seed=self.weight_seed)
+                                   seed=self.weight_seed,
+                                   content_keyed=True)
             elif algorithm in ("ppr", "pagerank"):
                 eng = build_engine(g, PLUS_TIMES, stump, normalize=True)
                 self._engines["ppr"] = self._engines["pagerank"] = eng
@@ -243,6 +307,89 @@ class GraphQueryServer:
         return _pmv(self.graph, sr, mesh, strategy=c.strategy,
                     balance=c.balance, kernel=kernel, batched=batched, **kw)
 
+    # ------------------------------------------------------------------
+    def mutate(self, delta, max_imbalance: float = 1.5) -> Dict[str, Any]:
+        """Apply one edge-delta batch (or a sequence, folded in order) to
+        the served graph and advance to the new snapshot epoch.
+
+        Consistency: any queued requests drain first, against the
+        pre-mutation snapshot — a query observes the graph it was
+        submitted under, never a half-applied delta. The snapshot swap
+        itself is a plain rebind (Graph objects are immutable), so
+        results materialised from in-flight buckets stay valid.
+
+        Cache: instead of the old all-or-nothing fingerprint flush (every
+        key died with the old fingerprint), the LRU **migrates**: entries
+        whose payloads prove the delta cannot have reached them — every
+        touched vertex unreached in the cached BFS levels / SSSP
+        distances / PPR ranks, i.e. in a different component both before
+        and after — re-key to the new fingerprint and keep serving; the
+        rest (and every whole-graph kind) invalidate. The proof obligations
+        are exactness-preserving because unit/normalized/content-keyed
+        edge values never change on untouched edges.
+
+        Partition plan: an already-computed partition_choice is patched in
+        O(|delta|) (PartitionPlan.apply_delta); if the patched imbalance
+        drifts past ``max_imbalance`` the cost-model planner reruns in
+        full and may switch strategy (graphs.cost_model.repair_choice).
+
+        Returns a report dict; cumulative counts land in ``stats()``."""
+        if self._queue:
+            self.flush()
+        deltas = delta if isinstance(delta, (list, tuple)) else (delta,)
+        g = self.graph
+        rows, cols = g.rows, g.cols
+        for d in deltas:
+            rows, cols = apply_edge_delta(rows, cols, g.n, d)
+        eff = edge_diff(g.rows, g.cols, rows, cols, g.n)
+        self.version += 1
+        self.counters["mutations"] += 1
+        report = {"version": self.version, "inserted": eff.n_inserts,
+                  "deleted": eff.n_deletes, "retained": 0,
+                  "invalidated": 0, "replanned": False}
+        if eff.n_inserts == 0 and eff.n_deletes == 0:
+            return report       # no-op epoch: same content, keys stay live
+        touched = touched_vertices(eff)
+        new_graph = dataclasses.replace(g, rows=rows, cols=cols)
+        new_key = self._engine_key_for(new_graph)
+
+        payload_field = {"bfs": "levels", "sssp": "dist", "ppr": "rank"}
+
+        def keep(algorithm: str, source: int, payload: Dict[str, Any]) -> bool:
+            if source == GLOBAL or algorithm not in payload_field:
+                return False    # whole-graph answers see every edge
+            vals = np.asarray(payload[payload_field[algorithm]])[touched]
+            if algorithm == "bfs":
+                return bool(np.all(vals < 0))
+            if algorithm == "sssp":
+                return bool(np.all(np.isinf(vals)))
+            # ppr: mass is exactly 0.0 on vertices the walk cannot reach
+            return bool(np.all(vals == 0.0))
+
+        retained, invalidated = self.cache.migrate(self.engine_key, new_key,
+                                                   keep)
+        replanned = False
+        if self._partition_choice is not None:
+            strategies, balances = candidate_space(self._strategy,
+                                                   self._balance)
+            self._partition_choice, replanned = repair_choice(
+                self._partition_choice, new_graph, eff,
+                n_devices=self.partition_devices,
+                strategies=strategies, balances=balances,
+                max_imbalance=max_imbalance)
+            self.counters["plan_replans" if replanned
+                          else "plan_repairs"] += 1
+        self.graph = new_graph
+        self.engine_key = new_key
+        self._engines = {}       # old-snapshot closures must never serve
+        self.counters["edges_inserted"] += eff.n_inserts
+        self.counters["edges_deleted"] += eff.n_deletes
+        self.counters["entries_retained"] += retained
+        self.counters["entries_invalidated"] += invalidated
+        report.update(retained=retained, invalidated=invalidated,
+                      replanned=replanned)
+        return report
+
     def submit(self, algorithm: str, source: int | None = None) -> GraphRequest:
         """Enqueue one query; resolution happens at the next flush().
         Traversal kinds require a source vertex; global kinds take none."""
@@ -262,7 +409,7 @@ class GraphQueryServer:
             raise ValueError(f"unknown algorithm {algorithm!r}; expected one "
                              f"of {ALGORITHMS + GLOBAL_ALGORITHMS}")
         self._queue.append(req)
-        self.stats["submitted"] += 1
+        self.counters["submitted"] += 1
         return req
 
     # ------------------------------------------------------------------
@@ -284,7 +431,7 @@ class GraphQueryServer:
         # payload conversion of bucket t happens while bucket t+1
         # computes; pad_to keeps one compiled runner for every bucket
         def to_payloads(bucket, res) -> Dict[int, Dict[str, Any]]:
-            self.stats["batches"] += 1
+            self.counters["batches"] += 1
             return self._materialize(algorithm, res, bucket)
 
         results = traverse_multi_buckets(
@@ -319,7 +466,7 @@ class GraphQueryServer:
     def _run_global(self, algorithm: str) -> Dict[str, Any]:
         """One whole-graph analytics run (computed at most once per graph
         thanks to the LRU; every asker shares the payload)."""
-        self.stats["global_runs"] += 1
+        self.counters["global_runs"] += 1
         if algorithm == "pagerank":
             res = pagerank(self.engine("pagerank"), alpha=self.alpha,
                            max_iters=self.max_iters)
@@ -380,10 +527,10 @@ class GraphQueryServer:
                         # shallow copy: numpy payloads stay shared (read-only)
                         req.result = dict(hit)
                         req.cached = True
-                        self.stats["cache_hits"] += 1
+                        self.counters["cache_hits"] += 1
                     elif fresh is not None:
                         req.result = dict(fresh)
-                        self.stats["deduped"] += 1
+                        self.counters["deduped"] += 1
                     else:
                         fresh = self._run_global(algorithm)
                         self.cache.put(key, fresh)
@@ -399,12 +546,12 @@ class GraphQueryServer:
                     # payloads stay shared (treat them as read-only)
                     req.result = dict(hit)
                     req.cached = True
-                    self.stats["cache_hits"] += 1
+                    self.counters["cache_hits"] += 1
                 elif req.source not in seen:
                     seen.add(req.source)
                     misses.append(req.source)
                 else:
-                    self.stats["deduped"] += 1
+                    self.counters["deduped"] += 1
             fresh: Dict[int, Dict[str, Any]] = (
                 self._run_batches(algorithm, misses) if misses else {})
             for src, payload in fresh.items():
@@ -413,5 +560,5 @@ class GraphQueryServer:
                 if req.result is None:
                     req.result = dict(fresh[req.source])
 
-        self.stats["served"] += len(queue)
+        self.counters["served"] += len(queue)
         return queue

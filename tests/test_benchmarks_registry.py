@@ -33,9 +33,10 @@ def test_every_runnable_module_is_registered():
         if re.search(r"^def run\(", p.read_text(), re.M))
     assert sorted(modules) == runnable
     # phases/pipeline_overlap: the ISSUE-3 satellite — the per-phase
-    # accounting and the overlap benchmark must ship --json metric rows
+    # accounting and the overlap benchmark must ship --json metric rows;
+    # dynamic_updates: the ISSUE-5 streaming-update benchmark
     for name in ("multi_query", "analytics", "table4_apps", "phases",
-                 "pipeline_overlap"):
+                 "pipeline_overlap", "dynamic_updates"):
         assert name in modules
 
 
@@ -146,3 +147,21 @@ def test_committed_baseline_gates_partition_balance():
                 assert key in rows, key
                 assert rows[key].get("checksum"), key
         assert ("partition_balance", f"{fam}/auto") in rows
+
+
+def test_committed_baseline_gates_dynamic_updates():
+    """The ISSUE-5 satellite: the baseline must pin every dynamic_updates
+    family × delta-kind row, with checksums on the integer-exact results
+    (BFS levels / SSSP distances / CC labels) so CI catches any drift in
+    the delta-applied snapshots or the incremental recompute they feed."""
+    data = json.loads((BENCH_DIR / "baseline.json").read_text())
+    rows = {(r["bench"], r["case"]): r for r in data["rows"]}
+    for fam in ("road", "uniform", "rmat"):
+        assert ("dynamic_updates", f"{fam}/apply") in rows
+        for kind in ("grow", "churn"):
+            for alg in ("bfs", "sssp", "cc"):
+                key = ("dynamic_updates", f"{fam}/{kind}/{alg}")
+                assert key in rows, key
+                assert rows[key].get("checksum"), key
+            assert ("dynamic_updates", f"{fam}/{kind}/pagerank") in rows
+    assert ("dynamic_updates", "road/server_mutate") in rows

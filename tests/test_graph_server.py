@@ -4,6 +4,7 @@ against the single-source apps (serve/graph_engine.py)."""
 import numpy as np
 import pytest
 
+from repro.core.delta import EdgeDelta
 from repro.graphs import bfs, generate, ppr, sssp
 from repro.graphs.analytics import connected_components, kcore, triangle_count
 from repro.graphs.ppr import pagerank
@@ -46,15 +47,15 @@ def test_dedup_and_cache(server, graph):
     r1 = server.submit("bfs", s)
     r2 = server.submit("bfs", s)          # same flush -> deduped
     server.flush()
-    assert server.stats["deduped"] == 1
-    assert server.stats["batches"] == 1   # one padded batch for one source
+    assert server.stats()["deduped"] == 1
+    assert server.stats()["batches"] == 1   # one padded batch for one source
     np.testing.assert_array_equal(r1.result["levels"], r2.result["levels"])
     assert not r1.cached and not r2.cached
 
     r3 = server.submit("bfs", s)          # later flush -> LRU hit
     server.flush()
-    assert r3.cached and server.stats["cache_hits"] == 1
-    assert server.stats["batches"] == 1   # engine never re-ran
+    assert r3.cached and server.stats()["cache_hits"] == 1
+    assert server.stats()["batches"] == 1   # engine never re-ran
     np.testing.assert_array_equal(r3.result["levels"], r1.result["levels"])
 
 
@@ -64,7 +65,7 @@ def test_batching_chunks_large_floods(server, graph):
         server.submit("bfs", s)
     done = server.flush()
     assert len(done) == 10
-    assert server.stats["batches"] == 3   # ceil(10 / 4)
+    assert server.stats()["batches"] == 3   # ceil(10 / 4)
     assert all(r.result is not None for r in done)
 
 
@@ -121,16 +122,16 @@ def test_global_computed_once_and_fanned_out(server, graph):
     stats['cache_hits'] reconciles with LRUCache.hits across query kinds)."""
     reqs = [server.submit("cc") for _ in range(3)]
     server.flush()
-    assert server.stats["global_runs"] == 1
+    assert server.stats()["global_runs"] == 1
     assert not reqs[0].cached and reqs[1].cached and reqs[2].cached
-    assert server.stats["cache_hits"] == 2 == server.cache.hits
+    assert server.stats()["cache_hits"] == 2 == server.cache.hits
     for r in reqs[1:]:
         np.testing.assert_array_equal(r.result["labels"],
                                       reqs[0].result["labels"])
     r4 = server.submit("cc")
     server.flush()
-    assert r4.cached and server.stats["global_runs"] == 1
-    assert server.stats["cache_hits"] == 3 == server.cache.hits
+    assert r4.cached and server.stats()["global_runs"] == 1
+    assert server.stats()["cache_hits"] == 3 == server.cache.hits
     np.testing.assert_array_equal(r4.result["labels"],
                                   reqs[0].result["labels"])
 
@@ -142,8 +143,8 @@ def test_global_compute_once_with_caching_disabled(graph):
     srv = GraphQueryServer(graph, cache_capacity=0)
     reqs = [srv.submit("cc") for _ in range(4)]
     srv.flush()
-    assert srv.stats["global_runs"] == 1
-    assert srv.stats["deduped"] == 3 and srv.stats["cache_hits"] == 0
+    assert srv.stats()["global_runs"] == 1
+    assert srv.stats()["deduped"] == 3 and srv.stats()["cache_hits"] == 0
     for r in reqs[1:]:
         np.testing.assert_array_equal(r.result["labels"],
                                       reqs[0].result["labels"])
@@ -232,7 +233,7 @@ def test_flush_pipelining_equality(graph):
             pip.submit(alg, s)
     done_seq, done_pip = seq.flush(), pip.flush()
     assert len(done_seq) == len(done_pip) == 30
-    assert seq.stats["batches"] == pip.stats["batches"] == 9
+    assert seq.stats()["batches"] == pip.stats()["batches"] == 9
     for a, b in zip(done_seq, done_pip):
         assert (a.algorithm, a.source) == (b.algorithm, b.source)
         assert a.result.keys() == b.result.keys()
@@ -262,6 +263,157 @@ def test_partition_strategy_resolution(graph):
         GraphQueryServer(graph, strategy="diagonal")
     with pytest.raises(ValueError):
         GraphQueryServer(graph, strategy="row:fair")
+
+
+def test_lru_counters_and_stats_accessor(graph):
+    """The ISSUE-5 satellite: hit/miss/eviction counters on the LRU and a
+    coherent GraphQueryServer.stats() snapshot."""
+    c = LRUCache(capacity=2)
+    assert c.stats() == {"hits": 0, "misses": 0, "evictions": 0,
+                         "size": 0, "capacity": 2}
+    c.put(("k", "bfs", 1), {}); c.put(("k", "bfs", 2), {})
+    c.put(("k", "bfs", 3), {})            # evicts 1
+    c.get(("k", "bfs", 3)); c.get(("k", "bfs", 1))
+    assert c.stats() == {"hits": 1, "misses": 1, "evictions": 1,
+                         "size": 2, "capacity": 2}
+
+    srv = GraphQueryServer(graph, batch_size=4)
+    srv.submit("bfs", 1); srv.flush()
+    st = srv.stats()
+    assert st["submitted"] == st["served"] == 1
+    assert st["version"] == 0
+    assert st["cache"] == srv.cache.stats()
+
+
+def _delta_for(graph):
+    """A delta confined to the largest component, plus the sources whose
+    cached answers must survive it (picked from other components)."""
+    from repro.graphs.analytics import cc_reference
+    labels = cc_reference(graph.rows, graph.cols, graph.n)
+    uniq, counts = np.unique(labels, return_counts=True)
+    big = int(uniq[np.argmax(counts)])
+    big_nodes = np.nonzero(labels == big)[0]
+    ins = np.stack([big_nodes[2:6], big_nodes[8:12]], 1)
+    outside = [int(np.nonzero(labels == u)[0][0])
+               for u, c in zip(uniq, counts) if u != big][:2]
+    delta = EdgeDelta(insert_rows=ins[:, 0], insert_cols=ins[:, 1],
+                      delete_rows=[graph.rows[int(np.nonzero(
+                          labels[graph.rows] == big)[0][0])]],
+                      delete_cols=[graph.cols[int(np.nonzero(
+                          labels[graph.rows] == big)[0][0])]])
+    return delta, int(big_nodes[0]), outside
+
+
+@pytest.fixture(scope="module")
+def split_graph():
+    # road dropout leaves several components — the retention scenario
+    return generate("r-TX", scale=0.001, seed=3)
+
+
+def test_mutate_selectively_invalidates(split_graph):
+    """mutate() must migrate entries the delta provably cannot reach to
+    the new fingerprint (they keep hitting) and drop the rest — the
+    all-or-nothing fingerprint flush is gone (ISSUE-5 acceptance)."""
+    delta, inside, outside = _delta_for(split_graph)
+    assert outside, "fixture graph must have several components"
+    srv = GraphQueryServer(split_graph, batch_size=4, cache_capacity=128)
+    keep_reqs = {}
+    for s in outside:
+        keep_reqs[s] = (srv.submit("bfs", s), srv.submit("sssp", s))
+    srv.submit("bfs", inside)
+    srv.submit("cc")
+    srv.flush()
+    old_key = srv.engine_key
+
+    report = srv.mutate(delta)
+    assert srv.version == 1 and srv.engine_key != old_key
+    assert report["retained"] == 2 * len(outside)
+    assert report["invalidated"] == 2          # inside-bfs + global cc
+    st = srv.stats()
+    assert st["entries_retained"] == report["retained"]
+    assert st["entries_invalidated"] == report["invalidated"]
+    assert st["mutations"] == 1 and st["version"] == 1
+
+    # survivors keep serving from cache — and stay exact on the new graph
+    hits0 = srv.stats()["cache"]["hits"]
+    for s in outside:
+        r = srv.submit("bfs", s); srv.flush()
+        assert r.cached
+        ref = bfs(srv.engine("bfs"), s)
+        np.testing.assert_array_equal(r.result["levels"],
+                                      np.asarray(ref.levels))
+        rs = srv.submit("sssp", s); srv.flush()
+        assert rs.cached
+        ref_s = sssp(srv.engine("sssp"), s)
+        np.testing.assert_array_equal(rs.result["dist"],
+                                      np.asarray(ref_s.dist))
+    assert srv.stats()["cache"]["hits"] == hits0 + 2 * len(outside)
+
+    # invalidated entries recompute against the new snapshot
+    r = srv.submit("bfs", inside); srv.flush()
+    assert not r.cached
+    ref = bfs(srv.engine("bfs"), inside)
+    np.testing.assert_array_equal(r.result["levels"], np.asarray(ref.levels))
+
+
+def test_mutate_drains_inflight_queue_against_old_snapshot(split_graph):
+    """Requests queued before mutate() observe the pre-mutation graph."""
+    delta, inside, _outside = _delta_for(split_graph)
+    srv = GraphQueryServer(split_graph, batch_size=4)
+    ref_old = bfs(srv.engine("bfs"), inside)     # old-snapshot oracle
+    req = srv.submit("bfs", inside)              # left queued
+    srv.mutate(delta)
+    assert req.result is not None, "mutate must flush the queue first"
+    np.testing.assert_array_equal(req.result["levels"],
+                                  np.asarray(ref_old.levels))
+    # ... and a fresh query sees the new snapshot
+    req2 = srv.submit("bfs", inside); srv.flush()
+    ref_new = bfs(srv.engine("bfs"), inside)
+    np.testing.assert_array_equal(req2.result["levels"],
+                                  np.asarray(ref_new.levels))
+
+
+def test_mutate_noop_keeps_cache(split_graph):
+    """Inserting present edges / deleting absent ones is a no-op epoch:
+    version bumps, fingerprint (and so every cache key) survives."""
+    srv = GraphQueryServer(split_graph, batch_size=4)
+    r = srv.submit("bfs", 0); srv.flush()
+    assert r.result is not None
+    key = srv.engine_key
+    u, v = int(split_graph.rows[0]), int(split_graph.cols[0])
+    report = srv.mutate(EdgeDelta(insert_rows=[u], insert_cols=[v]))
+    assert report == {"version": 1, "inserted": 0, "deleted": 0,
+                      "retained": 0, "invalidated": 0, "replanned": False}
+    assert srv.engine_key == key
+    r2 = srv.submit("bfs", 0); srv.flush()
+    assert r2.cached
+
+
+def test_mutate_repairs_partition_choice(split_graph):
+    """A computed partition_choice survives mutation via incremental plan
+    repair; its tile counts track the new snapshot's nnz."""
+    delta, _inside, _outside = _delta_for(split_graph)
+    srv = GraphQueryServer(split_graph, strategy="auto")
+    choice0 = srv.partition_choice                  # force computation
+    srv.mutate(delta)
+    st = srv.stats()
+    assert st["plan_repairs"] + st["plan_replans"] == 1
+    assert sum(srv.partition_choice.plan.tile_nnz) == srv.graph.nnz
+    assert srv.partition_choice is not choice0
+
+
+def test_mutate_global_entries_always_invalidate(split_graph):
+    """Whole-graph kinds see every edge: any effective delta must drop
+    them, and the next ask recomputes on the new snapshot."""
+    delta, _inside, _outside = _delta_for(split_graph)
+    srv = GraphQueryServer(split_graph, batch_size=4)
+    srv.submit("cc"); srv.flush()
+    assert srv.stats()["global_runs"] == 1
+    srv.mutate(delta)
+    r = srv.submit("cc"); srv.flush()
+    assert not r.cached and srv.stats()["global_runs"] == 2
+    ref = connected_components(srv.engine("cc"))
+    np.testing.assert_array_equal(r.result["labels"], np.asarray(ref.labels))
 
 
 def test_mixed_algorithms_one_flush(server, graph):
