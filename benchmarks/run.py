@@ -23,6 +23,7 @@ MODULES = [
     "fig7_adaptive_e2e",
     "fig8_scaling",
     "dynamic_updates",
+    "merge_collectives",
     "partition_balance",
     "phases",
     "pipeline_overlap",

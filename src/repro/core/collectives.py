@@ -1,0 +1,285 @@
+"""Interconnect-aware Merge collectives (paper §7's hardware ask, in software).
+
+ALPHA-PIM's headline hardware recommendation is "enabling direct
+interconnection networks among PIM cores to reduce data transfer
+overheads": on UPMEM every Merge bounces all partial outputs through the
+host CPU (DPU → CPU → DPU), and the PrIM lineage (arXiv:2110.01709,
+2105.03814) measures exactly that reduction-shaped transfer — not compute —
+as the dominant cost. Our analogue of the host bounce is the *flat* merge
+in :mod:`repro.core.distributed`: one bulk ``psum_scatter`` / ``all_to_all``
+with no topology structure. This module adds the direct-network
+alternatives as explicit neighbor-exchange schedules, all bit-identical in
+result layout to the flat merge (device *g* ends holding ⊕-reduced chunk
+*g*), so they are drop-in interchangeable:
+
+    flat     — the existing one-shot collective (``psum_scatter`` for ⊕=+,
+               ``all_to_all`` + local ⊕ otherwise). Modelled as the paper's
+               host-mediated pattern: every exchanged element crosses the
+               fabric twice (up to the host, back down).
+    ring     — ``ppermute``-based ring ⊕-reduce-scatter: d-1 steps, each
+               shipping one M/d chunk to the next neighbor and folding the
+               local contribution in. Direct links only; any device count.
+    tree     — recursive-halving generalized to a radix decomposition over
+               the mesh axes' prime factors (pure recursive halving when d
+               is a power of two): ⌈Σ(fᵢ-1)⌉ steps of pairwise/groupwise
+               exchanges with geometrically shrinking blocks. Handles
+               non-power-of-two device counts by using the actual factors.
+    staged2d — hierarchical row-then-column merge over the two mesh axes:
+               ⊕-reduce-scatter along ``axis_r`` first, then along
+               ``axis_c`` on the R-times-smaller block (``order="rc"``) —
+               or the transpose order (``order="cr"``, one extra M/d-sized
+               layout-fix ppermute), picked by the cost model when the two
+               axes have different link bandwidths. For the 2d strategy,
+               whose Merge spans only ``axis_c``, it degenerates to the
+               radix schedule over that single axis.
+
+Every topology implements the same ⊕-reduce-scatter contract with the
+semiring's ⊕ (psum/pmin/pmax/plus_and all work — nothing here assumes +),
+and every schedule is a static composition of ``ppermute``/slice/⊕, so the
+phase closures stay individually jittable and keep overlapping under
+:mod:`repro.core.pipeline`. Bandwidth-wise all reduce-scatters move the
+same (1-1/d)·M elements per device; what distinguishes them is *where*
+those elements travel (host bounce vs direct link) and in how many steps —
+which is exactly what :func:`repro.graphs.cost_model.merge_wire_cost`
+prices (α-β style: per-step latency + hop-weighted bytes-on-wire).
+
+Routing: :func:`plan_merge` builds a :class:`MergePlan` from (strategy,
+mesh shape, topology); :func:`merge` executes it inside a shard_map body.
+``make_distributed_spmv/spmspv/spgemm`` and ``build_phase_fns`` in
+:mod:`repro.core.distributed` all route their Retrieve+Merge through this
+one entry point; ``strategy="auto"`` (graphs.cost_model.choose_partition)
+selects the topology alongside the partition.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.semiring import Semiring
+
+Array = jax.Array
+
+#: The merge-collective families, flat (the baseline) first — cost-model
+#: candidate sweeps preserve this order so exact ties resolve to flat.
+MERGE_FAMILIES = ("flat", "ring", "tree", "staged2d")
+
+#: Stage orders a staged2d merge can run in (see plan_merge).
+STAGED_ORDERS = ("rc", "cr")
+
+
+def prime_factors(n: int) -> Tuple[int, ...]:
+    """Ascending prime factorization (2s first ⇒ the tree schedule is pure
+    recursive halving on power-of-two axes and degrades gracefully off it)."""
+    fs, p = [], 2
+    while p * p <= n:
+        while n % p == 0:
+            fs.append(p)
+            n //= p
+        p += 1
+    if n > 1:
+        fs.append(n)
+    return tuple(fs)
+
+
+@dataclasses.dataclass(frozen=True)
+class MergeStage:
+    """One groupwise exchange round-set: devices whose index on
+    ``axis_name`` shares every digit but ``(idx // place) % factor``
+    exchange sub-blocks and ⊕-fold, resolving that digit of the final
+    chunk id. ``factor - 1`` ppermutes of ``block/factor`` elements."""
+
+    axis_name: str
+    axis_size: int      # full size of the named mesh axis (perm domain)
+    factor: int         # group size resolved by this stage
+    place: int          # digit place value within the axis index
+
+
+@dataclasses.dataclass(frozen=True)
+class MergePlan:
+    """A compiled-schedule description for one Merge: which topology, over
+    which mesh axis (or axis tuple), in which staged decomposition.
+
+    Invariant shared by every topology: input is the per-device partial of
+    ``axis_size * m`` elements along the merge dim; output is the
+    ⊕-reduced chunk ``g`` of ``m`` elements on flat device ``g`` — the
+    identical contract (and bit-identical results on order-exact data) as
+    the flat ``psum_scatter`` / ``all_to_all`` merge.
+    """
+
+    topology: str                       # member of MERGE_FAMILIES
+    axis_name: Any                      # name or tuple naming the merge axis
+    axis_size: int                      # total devices reduced over
+    stages: Tuple[MergeStage, ...] = ()
+    # Post-stage layout-fix permutation over the *flat* merge axis
+    # (staged2d order="cr" transposes chunk ids; one extra ppermute).
+    fixup: Optional[Tuple[Tuple[int, int], ...]] = None
+    order: str = "rc"
+
+    def __post_init__(self):
+        if self.topology not in MERGE_FAMILIES:
+            raise ValueError(f"unknown merge topology {self.topology!r}; "
+                             f"expected one of {MERGE_FAMILIES}")
+
+
+def _axis_radix_stages(axis_name: str, axis_size: int) -> list[MergeStage]:
+    """Prime-radix stage list for one mesh axis, most-significant digit
+    first (big-endian nesting ⇒ final chunk offsets compose to the flat
+    device index)."""
+    stages = []
+    place = axis_size
+    for f in prime_factors(axis_size):
+        place //= f
+        stages.append(MergeStage(axis_name, axis_size, f, place))
+    return stages
+
+
+def plan_merge(strategy: str, mesh_shape: Tuple[int, int],
+               topology: str = "flat",
+               axis_names: Sequence[str] = ("dr", "dc"),
+               order: str = "rc") -> Optional[MergePlan]:
+    """Build the MergePlan for one Fig.-3 strategy on an (R, C) mesh.
+
+    * ``row``  — no Merge phase at all: returns None for every topology
+      (the output is born row-sharded).
+    * ``col``  — Merge spans the full flat axis (R·C devices). staged2d
+      uses the mesh's two axes as the hierarchy: ``order="rc"`` reduces
+      along ``axis_r`` first (the canonical big-endian nesting, no fixup),
+      ``order="cr"`` the transpose order plus one chunk-relayout ppermute.
+    * ``2d``   — Merge spans ``axis_c`` only (the Load already gathered
+      over ``axis_r``); staged2d degenerates to the radix schedule over
+      that single axis (== tree).
+    """
+    if strategy == "row":
+        return None
+    if topology not in MERGE_FAMILIES:
+        raise ValueError(f"unknown merge topology {topology!r}; "
+                         f"expected one of {MERGE_FAMILIES}")
+    if order not in STAGED_ORDERS:
+        raise ValueError(f"unknown staged order {order!r}; "
+                         f"expected one of {STAGED_ORDERS}")
+    ar, ac = axis_names
+    r_parts, c_parts = mesh_shape
+    if strategy == "col":
+        axis, d = (ar, ac), r_parts * c_parts
+        if topology in ("flat", "ring"):
+            return MergePlan(topology, axis, d)
+        if topology == "tree":
+            stages = (_axis_radix_stages(ar, r_parts)
+                      + _axis_radix_stages(ac, c_parts))
+            return MergePlan(topology, axis, d, tuple(stages))
+        # staged2d: one full-axis stage per mesh axis, in `order`.
+        r_stage = MergeStage(ar, r_parts, r_parts, 1)
+        c_stage = MergeStage(ac, c_parts, c_parts, 1)
+        if order == "rc":
+            return MergePlan(topology, axis, d, (r_stage, c_stage),
+                             order=order)
+        # cr resolves the c digit first, landing chunk c*R + r on flat
+        # device r*C + c; a final transpose ppermute restores chunk g at
+        # device g (priced as one extra M/d hop by the cost model).
+        fixup = tuple((r * c_parts + c, c * r_parts + r)
+                      for r in range(r_parts) for c in range(c_parts))
+        return MergePlan(topology, axis, d, (c_stage, r_stage),
+                         fixup=fixup, order=order)
+    if strategy == "2d":
+        if topology == "flat":
+            return MergePlan(topology, ac, c_parts)
+        if topology == "ring":
+            return MergePlan(topology, ac, c_parts)
+        # tree and (degenerate single-axis) staged2d share the radix form
+        return MergePlan(topology, ac, c_parts,
+                         tuple(_axis_radix_stages(ac, c_parts)))
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+# ---------------------------------------------------------------------------
+# Execution (inside shard_map bodies)
+# ---------------------------------------------------------------------------
+
+def _flat_reduce_scatter(x: Array, sr: Semiring, axis_name, d: int) -> Array:
+    """The baseline one-shot merge (the paper's host-mediated pattern).
+    XLA only fuses a sum-reduce-scatter; generic semirings exchange chunks
+    (all_to_all, the Retrieve) then ⊕ locally (the Merge)."""
+    if sr.collective == "psum":
+        return jax.lax.psum_scatter(x, axis_name, scatter_dimension=0,
+                                    tiled=True)
+    m = x.shape[0] // d
+    xs = x.reshape((d, m) + x.shape[1:])
+    exchanged = jax.lax.all_to_all(xs, axis_name, split_axis=0, concat_axis=0)
+    return sr.add_reduce(exchanged, axis=0)
+
+
+def _ring_reduce_scatter(x: Array, sr: Semiring, axis_name, d: int) -> Array:
+    """Neighbor-only ring ⊕-reduce-scatter: d-1 ppermute steps of one
+    M/d chunk each, folding the local contribution in at every hop. After
+    step s, device i carries chunk (i-2-s) mod d with s+2 contributions;
+    the last hop lands fully ⊕-reduced chunk i on device i."""
+    m = x.shape[0] // d
+    chunks = x.reshape((d, m) + x.shape[1:])
+    i = jax.lax.axis_index(axis_name)
+    perm = [(j, (j + 1) % d) for j in range(d)]
+    acc = jax.lax.dynamic_index_in_dim(chunks, (i - 1) % d, 0, keepdims=False)
+    for s in range(d - 1):
+        acc = jax.lax.ppermute(acc, axis_name, perm)
+        local = jax.lax.dynamic_index_in_dim(chunks, (i - 2 - s) % d, 0,
+                                             keepdims=False)
+        acc = sr.add(acc, local)
+    return acc
+
+
+def _run_stage(block: Array, sr: Semiring, st: MergeStage) -> Array:
+    """One radix/staged exchange: split the live block into ``factor``
+    sub-blocks; every device keeps the one indexed by its digit and ships
+    each other sub-block straight to the group peer owning that digit
+    (factor-1 ppermutes over direct links), ⊕-folding what it receives."""
+    f, p = st.factor, st.place
+    if f == 1:
+        return block
+    m = block.shape[0] // f
+    sub = block.reshape((f, m) + block.shape[1:])
+    a = (jax.lax.axis_index(st.axis_name) // p) % f
+    acc = jax.lax.dynamic_index_in_dim(sub, a, 0, keepdims=False)
+    for delta in range(1, f):
+        perm = []
+        for j in range(st.axis_size):
+            aj = (j // p) % f
+            perm.append((j, j + ((((aj + delta) % f) - aj) * p)))
+        payload = jax.lax.dynamic_index_in_dim(sub, (a + delta) % f, 0,
+                                               keepdims=False)
+        acc = sr.add(acc, jax.lax.ppermute(payload, st.axis_name, perm))
+    return acc
+
+
+def merge(y_partial: Array, sr: Semiring, plan: Optional[MergePlan],
+          *, axis: int = 0) -> Array:
+    """⊕-reduce-scatter ``y_partial`` along ``axis`` per ``plan`` — the
+    Merge phase's single entry point (see module docstring for routing).
+
+    ``plan=None`` (the row strategy) is the identity. ``axis`` selects the
+    merge dimension (0 for vectors and SpGEMM row blocks, 1 for the
+    batched [B, d·m] layout); the scattered dimension shrinks by
+    ``plan.axis_size`` and every other dimension is untouched. Output
+    contract for all topologies: flat device g holds ⊕-reduced chunk g —
+    identical to the flat merge, so topologies interchange bit-for-bit on
+    order-exact (integer-valued) data.
+    """
+    if plan is None:
+        return y_partial
+    if axis != 0:
+        y = jnp.moveaxis(y_partial, axis, 0)
+        return jnp.moveaxis(merge(y, sr, plan, axis=0), 0, axis)
+    if plan.topology == "flat":
+        return _flat_reduce_scatter(y_partial, sr, plan.axis_name,
+                                    plan.axis_size)
+    if plan.topology == "ring":
+        return _ring_reduce_scatter(y_partial, sr, plan.axis_name,
+                                    plan.axis_size)
+    # tree / staged2d: chained radix stages (+ optional layout fixup)
+    block = y_partial
+    for st in plan.stages:
+        block = _run_stage(block, sr, st)
+    if plan.fixup is not None:
+        block = jax.lax.ppermute(block, plan.axis_name, list(plan.fixup))
+    return block

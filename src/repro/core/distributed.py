@@ -17,6 +17,16 @@ Strategies (paper Fig. 3):
             (x is sharded over axis_c, replicated over axis_r after gather);
             Retrieve+Merge = ⊕-reduce-scatter over axis_c.
 
+The *shape* of that ⊕-reduce-scatter is itself a free choice — the paper's
+"direct interconnection networks among PIM cores" recommendation. Every
+factory takes ``topology`` (one of :data:`repro.core.collectives
+.MERGE_FAMILIES`: ``flat`` / ``ring`` / ``tree`` / ``staged2d``) and routes
+the Merge through :func:`repro.core.collectives.merge`; all topologies
+produce the identical output layout (and bit-identical results on
+order-exact data), differing only in modeled bytes-on-wire and step count
+(priced by graphs.cost_model.merge_wire_cost, picked by
+``strategy="auto"``).
+
 Between traversal iterations, ``vec_to_2d_layout`` converts the output
 layout into the next iteration's input layout — the paper's inter-iteration
 retrieve+reload through the host CPU, which on TPU is a collective permute.
@@ -52,6 +62,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.core.collectives import merge as merge_collective
+from repro.core.collectives import plan_merge
 from repro.core.partition import PartitionedMatrix
 from repro.core.semiring import Semiring
 from repro.core.spgemm import apply_mask, spgemm_masked
@@ -62,17 +74,14 @@ from repro.core.spmv import spmv as _spmv
 Array = jax.Array
 
 
-def _op_reduce_scatter(x: Array, sr: Semiring, axis_name: str, axis_size: int) -> Array:
-    """⊕-reduce-scatter. XLA only fuses sum-reduce-scatter; generic semirings
-    use all_to_all (the Retrieve phase) followed by a local ⊕ (the Merge
-    phase), which is exactly the paper's retrieve-then-merge pipeline."""
-    if sr.collective == "psum":
-        return jax.lax.psum_scatter(x, axis_name, scatter_dimension=0, tiled=True)
-    # x: [M_local_out * axis_size] → split leading dim, exchange, local reduce.
-    m = x.shape[0] // axis_size
-    xs = x.reshape(axis_size, m)
-    exchanged = jax.lax.all_to_all(xs, axis_name, split_axis=0, concat_axis=0)
-    return sr.add_reduce(exchanged.reshape(axis_size, m), axis=0)
+def _merge_plans(mesh: Mesh, axis_names: Sequence[str], topology: str,
+                 merge_order: str):
+    """(col_plan, col2d_plan) for this mesh — the MergePlans the col and 2d
+    strategies' Retrieve+Merge route through (collectives.plan_merge)."""
+    ar, ac = axis_names
+    shape = (mesh.shape[ar], mesh.shape[ac])
+    return (plan_merge("col", shape, topology, axis_names, merge_order),
+            plan_merge("2d", shape, topology, axis_names, merge_order))
 
 
 def _local_matvec(a_local, x_full: Array, sr: Semiring, kernel: str, impl: str) -> Array:
@@ -123,6 +132,8 @@ def make_distributed_matvec(
     impl: str = "auto",
     axis_names: Sequence[str] = ("dr", "dc"),
     f_local: int | None = None,
+    topology: str = "flat",
+    merge_order: str = "rc",
 ) -> Callable[[object, Array], Array]:
     """Build `fn(parts, x_sharded) -> y_sharded` under shard_map.
 
@@ -137,12 +148,18 @@ def make_distributed_matvec(
     ``f_local`` (SpMSpV only) switches the Load phase to the paper's
     compressed form: each shard all-gathers a capacity-``f_local`` frontier
     instead of its dense slice (see gather_frontier).
+
+    ``topology`` picks the Merge collective family (core.collectives;
+    ``merge_order`` is the staged2d stage order). Output layout and — on
+    order-exact data — bits are identical across topologies; the row
+    strategy has no Merge, so the choice is a no-op there.
     """
     _check_plan(pm, strategy)
     ar, ac = axis_names
     flat = (ar, ac)
     r_parts, c_parts = pm.grid
     d = pm.n_devices
+    col_mp, col2d_mp = _merge_plans(mesh, axis_names, topology, merge_order)
     compressed = f_local is not None and kernel == "spmspv"
 
     a_specs = jax.tree.map(lambda _: P(flat), pm.parts)
@@ -168,7 +185,7 @@ def make_distributed_matvec(
         def body(parts, x):
             a_local = strip_lead(parts)
             y_partial = _local_matvec(a_local, x[0], sr, kernel, impl)  # Kernel
-            y = _op_reduce_scatter(y_partial, sr, flat, d)  # Retrieve+Merge
+            y = merge_collective(y_partial, sr, col_mp)     # Retrieve+Merge
             return y[None]
 
         in_specs = (a_specs, P(flat))
@@ -191,7 +208,7 @@ def make_distributed_matvec(
                 x_cols = jax.lax.all_gather(x[0, 0], ar, tiled=True).reshape(-1)
                 y_partial = _local_matvec(a_local, x_cols, sr, kernel, impl)
             # Retrieve+Merge over the column axis → y2[r, c] = chunk r*C + c.
-            y = _op_reduce_scatter(y_partial, sr, ac, c_parts)
+            y = merge_collective(y_partial, sr, col2d_mp)
             return y[None, None]
 
         in_specs = (jax.tree.map(lambda _: P((ar,), (ac,)), pm.parts), P(ar, ac))
@@ -231,20 +248,6 @@ def make_distributed_spmspv(mesh: Mesh, pm: PartitionedMatrix, sr: Semiring,
                                    **kwargs)
 
 
-def _op_reduce_scatter_batched(x: Array, sr: Semiring, axis_name,
-                               axis_size: int) -> Array:
-    """Batched ⊕-reduce-scatter: x is [B, M_local_out * axis_size]; the
-    device axis moves to dim 1 so the batch rows stay contiguous."""
-    if sr.collective == "psum":
-        return jax.lax.psum_scatter(x, axis_name, scatter_dimension=1,
-                                    tiled=True)
-    b = x.shape[0]
-    m = x.shape[1] // axis_size
-    xs = x.reshape(b, axis_size, m)
-    exchanged = jax.lax.all_to_all(xs, axis_name, split_axis=1, concat_axis=1)
-    return sr.add_reduce(exchanged, axis=1)
-
-
 def make_distributed_batched_matvec(
     mesh: Mesh,
     pm: PartitionedMatrix,
@@ -253,6 +256,8 @@ def make_distributed_batched_matvec(
     kernel: str = "spmv",
     impl: str = "auto",
     axis_names: Sequence[str] = ("dr", "dc"),
+    topology: str = "flat",
+    merge_order: str = "rc",
 ) -> Callable[[object, Array], Array]:
     """[B, n]-block counterpart of make_distributed_matvec: the adjacency
     shards exactly as in the unbatched path (paper Fig. 3 strategies) while
@@ -266,12 +271,15 @@ def make_distributed_batched_matvec(
     would re-introduce the truncation ambiguity the ladder avoids.
     Balanced (``balance="nnz"``) plans work unchanged: shard the block with
     ``plan.shard_input_batch`` and recover it with ``unshard_output_batch``.
+    ``topology``/``merge_order`` pick the Merge collective exactly as in
+    make_distributed_matvec (the whole [B, ·] block rides each exchange).
     """
     _check_plan(pm, strategy)
     ar, ac = axis_names
     flat = (ar, ac)
     r_parts, c_parts = pm.grid
     d = pm.n_devices
+    col_mp, col2d_mp = _merge_plans(mesh, axis_names, topology, merge_order)
 
     a_specs = jax.tree.map(lambda _: P(flat), pm.parts)
 
@@ -296,7 +304,7 @@ def make_distributed_batched_matvec(
         def body(parts, x):
             a_local = strip_lead(parts)
             y_partial = local_batch_matvec(a_local, x[0])   # [B, m_full]
-            y = _op_reduce_scatter_batched(y_partial, sr, flat, d)
+            y = merge_collective(y_partial, sr, col_mp, axis=1)
             return y[None]
 
         return shard_map(body, mesh=mesh, in_specs=(a_specs, P(flat)),
@@ -310,7 +318,7 @@ def make_distributed_batched_matvec(
             a_local = strip_lead(strip_lead(parts))
             x_cols = jax.lax.all_gather(x[0, 0], ar, tiled=True, axis=1)
             y_partial = local_batch_matvec(a_local, x_cols)
-            y = _op_reduce_scatter_batched(y_partial, sr, ac, c_parts)
+            y = merge_collective(y_partial, sr, col2d_mp, axis=1)
             return y[None, None]
 
         fn_body = shard_map(
@@ -331,26 +339,14 @@ def make_distributed_batched_matvec(
     raise ValueError(strategy)
 
 
-def _op_reduce_scatter_rows(c: Array, sr: Semiring, axis_name,
-                            axis_size: int) -> Array:
-    """⊕-reduce-scatter over the row dim of a [M, N] partial product —
-    the SpGEMM Retrieve+Merge. Sum fuses to psum_scatter; generic
-    semirings exchange row chunks (all_to_all) then ⊕ locally."""
-    if sr.collective == "psum":
-        return jax.lax.psum_scatter(c, axis_name, scatter_dimension=0,
-                                    tiled=True)
-    m = c.shape[0] // axis_size
-    cs = c.reshape(axis_size, m, c.shape[1])
-    exchanged = jax.lax.all_to_all(cs, axis_name, split_axis=0, concat_axis=0)
-    return sr.add_reduce(exchanged, axis=0)
-
-
 def make_distributed_spgemm(
     mesh: Mesh,
     pm: PartitionedMatrix,
     sr: Semiring,
     strategy: str,
     axis_names: Sequence[str] = ("dr", "dc"),
+    topology: str = "flat",
+    merge_order: str = "rc",
 ) -> Callable[..., Array]:
     """Partitioned masked SpGEMM C = (A ⊕.⊗ B) ⊙ M over the Fig.-3
     strategies — the matrix-matrix counterpart of make_distributed_matvec.
@@ -371,12 +367,15 @@ def make_distributed_spgemm(
     post-merge, on already-sharded output rows — masking never crosses
     the fabric.  B rows shard via ``plan.shard_input_rows``; C and the mask
     live in the output-row layout (``plan.shard_output_rows`` /
-    ``unshard_output_rows``), so balanced plans work unchanged."""
+    ``unshard_output_rows``), so balanced plans work unchanged.
+    ``topology``/``merge_order`` pick the Merge collective for C's row
+    blocks exactly as in make_distributed_matvec."""
     _check_plan(pm, strategy)
     ar, ac = axis_names
     flat = (ar, ac)
     r_parts, c_parts = pm.grid
     d = pm.n_devices
+    col_mp, col2d_mp = _merge_plans(mesh, axis_names, topology, merge_order)
 
     a_specs = jax.tree.map(lambda _: P(flat), pm.parts)
 
@@ -401,7 +400,7 @@ def make_distributed_spgemm(
         def body(parts, b, mask):
             a_local = strip_lead(parts)
             c_partial = local_spgemm(a_local, b[0])     # Kernel (no Load)
-            c = _op_reduce_scatter_rows(c_partial, sr, flat, d)
+            c = merge_collective(c_partial, sr, col_mp)
             return apply_mask(c, mask[0], sr)[None]
 
         in_specs = (a_specs, P(flat), P(flat))
@@ -417,7 +416,7 @@ def make_distributed_spgemm(
             # use the same column-major 2d input layout as the matvec x).
             b_cols = jax.lax.all_gather(b[0, 0], ar, tiled=True, axis=0)
             c_partial = local_spgemm(a_local, b_cols)
-            c = _op_reduce_scatter_rows(c_partial, sr, ac, c_parts)
+            c = merge_collective(c_partial, sr, col2d_mp)
             return apply_mask(c, mask[0, 0], sr)[None, None]
 
         fn_body = shard_map(
@@ -457,7 +456,8 @@ def make_distributed_spgemm(
 
 def build_phase_fns(mesh: Mesh, pm: PartitionedMatrix, sr: Semiring,
                     strategy: str, kernel: str, f_local: int | None = None,
-                    donate: bool = False):
+                    donate: bool = False, topology: str = "flat",
+                    merge_order: str = "rc"):
     """Per-phase jitted closures for one Fig.-3 strategy (see the module
     docstring for the phase vocabulary). Returns a dict:
 
@@ -487,11 +487,18 @@ def build_phase_fns(mesh: Mesh, pm: PartitionedMatrix, sr: Semiring,
     assumes the input and output chunkings coincide, which holds for
     ``balance="rows"`` square tiles — iterating a balanced plan requires a
     plan unshard/reshard between steps instead.
+
+    ``topology``/``merge_order`` pick the Merge collective family
+    (core.collectives) for the ``retrieve_merge`` closure and the fused
+    ``e2e`` program alike; the per-phase split — and with it the pipeline
+    overlap in core.pipeline — is unchanged, since every topology is one
+    jittable closure with the same in/out layout.
     """
     _check_plan(pm, strategy)
     ar, ac = "dr", "dc"
     flat = (ar, ac)
     d = pm.n_devices
+    col_mp, col2d_mp = _merge_plans(mesh, (ar, ac), topology, merge_order)
     a_specs = jax.tree.map(lambda _: P(flat), pm.parts)
     strip = lambda t: jax.tree.map(lambda x: x[0], t)  # noqa: E731
     rm_jit_kwargs = {}
@@ -521,7 +528,7 @@ def build_phase_fns(mesh: Mesh, pm: PartitionedMatrix, sr: Semiring,
         kern_sm = shard_map(kern, mesh=mesh, in_specs=(a_specs, P(flat)),
                             out_specs=P(flat), check_rep=False)
         rm = shard_map(
-            lambda y: _op_reduce_scatter(y[0], sr, flat, d)[None],
+            lambda y: merge_collective(y[0], sr, col_mp)[None],
             mesh=mesh, in_specs=P(flat), out_specs=P(flat), check_rep=False)
         fns["load"] = None                  # input already sharded
         fns["kernel"] = jax.jit(lambda parts, xs, _xf: kern_sm(parts, xs))
@@ -545,7 +552,7 @@ def build_phase_fns(mesh: Mesh, pm: PartitionedMatrix, sr: Semiring,
         kern_sm = shard_map(kern, mesh=mesh, in_specs=(a2, P(ar, ac)),
                             out_specs=P(ar, ac), check_rep=False)
         rm = shard_map(
-            lambda y: _op_reduce_scatter(y[0, 0], sr, ac, c_parts)[None, None],
+            lambda y: merge_collective(y[0, 0], sr, col2d_mp)[None, None],
             mesh=mesh, in_specs=P(ar, ac), out_specs=P(ar, ac), check_rep=False)
 
         fns["load"] = jax.jit(
@@ -562,7 +569,9 @@ def build_phase_fns(mesh: Mesh, pm: PartitionedMatrix, sr: Semiring,
 
     fns["e2e"] = jax.jit(make_distributed_matvec(mesh, pm, sr, strategy,
                                                  kernel=kernel,
-                                                 f_local=f_local))
+                                                 f_local=f_local,
+                                                 topology=topology,
+                                                 merge_order=merge_order))
     if f_local is not None and strategy in ("row", "2d"):
         # compressed Load: time the per-shard compress + frontier gather
         axis = flat if strategy == "row" else ar

@@ -33,6 +33,13 @@ Two pipelines model the fix at the two granularities the repo executes:
   :class:`repro.serve.graph_engine.GraphQueryServer` share one
   implementation.
 
+Both pipelines are agnostic to *how* the Merge phase moves bytes: the
+closures build_phase_fns hands over may run any
+:mod:`repro.core.collectives` topology (flat host-bounce, ring, tree,
+staged-2D) — the collective executes inside the Merge closure's
+shard_map, so phase overlap and the ``depth=0`` bit-equality guarantee
+are preserved unchanged under every topology.
+
 Overlap is quantified by ``benchmarks/pipeline_overlap.py``: pipelined
 wall time vs the sequential per-phase sum, per Fig.-3 strategy and
 Table-2 family.

@@ -26,6 +26,25 @@ core.distributed's phases use):
 The winner is the lowest total; ties break toward the lower measured
 imbalance, so ``strategy="auto"`` (serve.graph_engine / graphs.multi) can
 never pick a plan more skewed than the worst fixed strategy.
+
+Merge pricing (paper §7's interconnect recommendation): every candidate
+cost row also carries an α-β priced **bytes-on-wire** estimate for the
+Merge phase under each core.collectives topology.  All bandwidth-optimal
+⊕-reduce-scatters move the same ``(1 - 1/d)·M`` elements per device, so
+what differentiates topologies is *which links* those elements cross and
+*how many latency steps* they take:
+
+* ``flat``  — the host-mediated baseline (UPMEM's DPU→CPU→DPU bounce):
+  every element crosses the narrow host link twice (``HOST_HOP = 2``),
+  in one bulk step;
+* ``ring`` / ``tree`` / ``staged2d`` — direct neighbour links, hop
+  weight 1 per element, at the price of more α (per-step latency)
+  steps: ``d-1`` for the ring, ``Σ(fᵢ-1)`` over prime factors for the
+  tree, ``(R-1)+(C-1)`` for the staged 2-D exchange.
+
+:func:`choose_merge` ranks ``wire + MERGE_ALPHA·steps`` with ``flat``
+listed first and a strict ``<``, so ``strategy="auto"`` never picks a
+collective the model scores worse than the flat baseline.
 """
 from __future__ import annotations
 
@@ -36,6 +55,7 @@ from typing import Tuple
 import numpy as np
 
 from repro.core.adaptive import DecisionStump, GraphFeatures, fit_decision_stump
+from repro.core.collectives import MERGE_FAMILIES, STAGED_ORDERS, plan_merge
 from repro.core.partition import BALANCES, PartitionPlan, plan_partition
 from repro.graphs import datasets
 
@@ -121,11 +141,107 @@ def candidate_space(strategy: str, balance: str | None):
     return strategies, balances
 
 
+# ---------------------------------------------------------------------------
+# Merge wire pricing (paper §7: direct inter-core interconnects)
+# ---------------------------------------------------------------------------
+
+#: Hop weight of the host-mediated path: a flat merge bounces every
+#: element DPU→CPU→DPU, crossing the narrow host link twice.  Direct
+#: neighbour links (ring/tree/staged2d) are weight 1.
+HOST_HOP = 2.0
+
+#: α term, in element-transfer equivalents per collective step — the
+#: fixed launch/sync latency one ppermute round costs relative to moving
+#: one element.  Small enough that β (bytes) dominates at real sizes,
+#: large enough to break wire ties toward fewer steps (tree's prime-radix
+#: schedule beats staged2d's full-axis one on composite axis sizes).
+MERGE_ALPHA = 64.0
+
+MERGE_TOPOLOGIES = MERGE_FAMILIES
+
+
+def merge_wire_cost(strategy: str, mesh_grid: Tuple[int, int],
+                    m_elems: float, topology: str = "flat",
+                    order: str = "rc",
+                    link_weights: Tuple[float, float] = (1.0, 1.0)) -> dict:
+    """Price one Merge of ``m_elems`` per-device partial-output elements
+    on an (R, C) mesh: ``wire`` (hop-weighted elements each device puts
+    on the interconnect), ``steps`` (latency rounds), and the combined
+    ``score = wire + MERGE_ALPHA * steps`` used for ranking.
+
+    ``link_weights`` are the relative per-element costs of the two mesh
+    axes' direct links (row axis, col axis); collectives that span the
+    flattened mesh (flat/ring over a ``col`` merge) pay the wider of the
+    two, since their neighbour hops cross both link kinds.
+    """
+    plan = plan_merge(strategy, mesh_grid, topology, order=order)
+    if plan is None:                                   # row: no Merge phase
+        return {"wire": 0.0, "steps": 0, "score": 0.0}
+    w_r, w_c = (float(w) for w in link_weights)
+    by_axis = {"dr": w_r, "dc": w_c}
+    w_span = max(w_r, w_c) if isinstance(plan.axis_name, tuple) \
+        else by_axis[plan.axis_name]
+    d = plan.axis_size
+    m = float(m_elems)
+    if topology == "flat":
+        wire, steps = HOST_HOP * w_span * (d - 1) / d * m, 1
+    elif topology == "ring":
+        wire, steps = w_span * (d - 1) / d * m, d - 1
+    else:                                   # tree / staged2d: walk stages
+        wire, steps, live = 0.0, 0, m
+        for st in plan.stages:
+            f = st.factor
+            wire += by_axis[st.axis_name] * (f - 1) / f * live
+            steps += f - 1
+            live /= f
+        if plan.fixup is not None:          # staged2d "cr" relayout hop
+            wire += w_span * live
+            steps += 1
+    return {"wire": wire, "steps": steps,
+            "score": wire + MERGE_ALPHA * steps}
+
+
+def choose_merge(strategy: str, mesh_grid: Tuple[int, int], m_elems: float,
+                 link_weights: Tuple[float, float] = (1.0, 1.0)
+                 ) -> Tuple[str, str, dict]:
+    """Pick the cheapest Merge collective for one strategy on one mesh:
+    sweep every topology (and both staged2d orders), rank by the α-β
+    score.  ``flat`` is evaluated first and replaced only on a strict
+    ``<``, so ties — and the degenerate ``row`` strategy, which has no
+    Merge at all — keep the host-path baseline."""
+    best = None
+    for topology in MERGE_FAMILIES:
+        orders = STAGED_ORDERS if topology == "staged2d" else ("rc",)
+        for order in orders:
+            cost = merge_wire_cost(strategy, mesh_grid, m_elems,
+                                   topology, order, link_weights)
+            if best is None or cost["score"] < best[2]["score"]:
+                best = (topology, order, cost)
+    return best
+
+
 def estimate_phase_costs(plan: PartitionPlan, strategy: str,
                          kernel: str = "spmv",
-                         frontier_density: float = 1.0) -> dict:
+                         frontier_density: float = 1.0, *,
+                         mesh_grid: Tuple[int, int] | None = None,
+                         merge: str = "auto", merge_order: str = "rc",
+                         link_weights: Tuple[float, float] = (1.0, 1.0),
+                         elem_bytes: int = 4) -> dict:
     """Per-device Load/Kernel/Retrieve element costs of one distributed
-    matvec under ``plan`` (see module docstring for the accounting)."""
+    matvec under ``plan`` (see module docstring for the accounting),
+    plus the Merge-collective pricing: ``merge``/``merge_order`` (the
+    chosen or pinned topology), ``merge_wire``/``merge_steps`` (its
+    hop-weighted element traffic and latency rounds), and ``wire_bytes``
+    — total bytes each device puts on the wire per matvec (Load elements
+    cross the host link once; Merge priced per topology).
+
+    ``mesh_grid`` is the physical (R, C) device mesh the collectives'
+    staged/tree schedules decompose over; it defaults to the square-ish
+    2d grid for ``plan.n_devices`` (the same default the factories use).
+    ``merge="auto"`` selects via :func:`choose_merge`; a fixed topology
+    name prices that one.  The ``total`` ranking choose_partition sorts
+    by is untouched — wire pricing refines the pick, never reorders it.
+    """
     m_loc, n_loc = plan.local_shape
     m_pad, n_pad = plan.padded_shape
     density = float(np.clip(frontier_density, 0.0, 1.0))
@@ -139,21 +255,37 @@ def estimate_phase_costs(plan: PartitionPlan, strategy: str,
     if kernel == "spmspv":
         kern *= density
     total = load + kern + retrieve
+    if mesh_grid is None:
+        mesh_grid = strategy_grid("2d", plan.n_devices)
+    m_merge = {"row": 0.0, "col": float(m_pad), "2d": float(m_loc)}[strategy]
+    if merge == "auto":
+        topo, order, mc = choose_merge(strategy, mesh_grid, m_merge,
+                                       link_weights)
+    else:
+        topo, order = merge, merge_order
+        mc = merge_wire_cost(strategy, mesh_grid, m_merge, topo, order,
+                             link_weights)
     return {"load": load, "kernel": kern, "retrieve": retrieve,
-            "total": total, "imbalance": plan.imbalance()}
+            "total": total, "imbalance": plan.imbalance(),
+            "merge": topo, "merge_order": order,
+            "merge_wire": mc["wire"], "merge_steps": mc["steps"],
+            "wire_bytes": (load + mc["wire"]) * elem_bytes}
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class PlannerChoice:
     """The planner's answer for one graph: the picked strategy+balance, its
-    plan, and the full per-candidate cost table (keyed (strategy, balance))
-    for reporting."""
+    plan, the Merge collective priced cheapest for that pick
+    (``merge``/``merge_order``, see :func:`choose_merge`), and the full
+    per-candidate cost table (keyed (strategy, balance)) for reporting."""
 
     strategy: str
     balance: str
     grid: Tuple[int, int]
     plan: PartitionPlan
     costs: dict
+    merge: str = "flat"
+    merge_order: str = "rc"
 
 
 def choose_partition(rows: np.ndarray, cols: np.ndarray,
@@ -168,6 +300,7 @@ def choose_partition(rows: np.ndarray, cols: np.ndarray,
     (for traversal engines that is the *transposed* adjacency)."""
     rows = np.asarray(rows, np.int64)
     cols = np.asarray(cols, np.int64)
+    mesh_grid = strategy_grid("2d", n_devices, grid2d)
     table: dict = {}
     best = None
     for strategy in strategies:
@@ -175,14 +308,16 @@ def choose_partition(rows: np.ndarray, cols: np.ndarray,
         for balance in balances:
             plan = plan_partition(rows, cols, shape, grid, balance)
             cost = estimate_phase_costs(plan, strategy, kernel,
-                                        frontier_density)
+                                        frontier_density,
+                                        mesh_grid=mesh_grid)
             table[(strategy, balance)] = cost
             key = (cost["total"], cost["imbalance"])
             if best is None or key < best[0]:
-                best = (key, strategy, balance, grid, plan)
-    _, strategy, balance, grid, plan = best
+                best = (key, strategy, balance, grid, plan, cost)
+    _, strategy, balance, grid, plan, cost = best
     return PlannerChoice(strategy=strategy, balance=balance, grid=grid,
-                         plan=plan, costs=table)
+                         plan=plan, costs=table,
+                         merge=cost["merge"], merge_order=cost["merge_order"])
 
 
 def plan_for_graph(graph, n_devices: int = 8,
@@ -229,6 +364,10 @@ def repair_choice(choice: PlannerChoice, graph, delta,
                               balances=balances), True
     costs = dict(choice.costs)
     costs[(choice.strategy, choice.balance)] = estimate_phase_costs(
-        patched, choice.strategy, kernel, frontier_density)
+        patched, choice.strategy, kernel, frontier_density,
+        mesh_grid=strategy_grid("2d", n_devices, grid2d),
+        merge=choice.merge, merge_order=choice.merge_order)
     return PlannerChoice(strategy=choice.strategy, balance=choice.balance,
-                         grid=choice.grid, plan=patched, costs=costs), False
+                         grid=choice.grid, plan=patched, costs=costs,
+                         merge=choice.merge,
+                         merge_order=choice.merge_order), False

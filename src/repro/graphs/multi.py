@@ -372,7 +372,8 @@ def partitioned_matvec(graph, sr, mesh, strategy: str = "auto",
                        balance: str | None = None, kernel: str = "spmv",
                        fmt: str | None = None, frontier_density: float = 1.0,
                        weighted: bool = False, normalize: bool = False,
-                       seed: int = 0, batched: bool = False):
+                       seed: int = 0, batched: bool = False,
+                       topology: str = "auto", merge_order: str | None = None):
     """Partition ``graph``'s transposed adjacency over ``mesh`` (axes
     ``dr``/``dc``) and build its distributed matvec — the Fig.-3 execution
     path of the many-query layer, with the partition decided by the
@@ -383,6 +384,12 @@ def partitioned_matvec(graph, sr, mesh, strategy: str = "auto",
     histogram and ``frontier_density``; a fixed ``"row"``/``"col"``/
     ``"2d"`` (optionally suffixed ``:rows``/``:nnz``, or with an explicit
     ``balance``) pins it while still producing the planner's cost table.
+
+    ``topology="auto"`` likewise takes the Merge collective the planner
+    priced cheapest (``choice.merge``/``choice.merge_order`` — see
+    :func:`repro.graphs.cost_model.choose_merge`); a fixed ``"flat"``/
+    ``"ring"``/``"tree"``/``"staged2d"`` pins it (``merge_order``
+    selects the staged-2D exchange order, default ``"rc"``).
 
     Returns ``(pm, fn, choice)``: the PartitionedMatrix (its ``plan``
     carries the shard/unshard layout helpers), the jit-ready matvec
@@ -411,9 +418,12 @@ def partitioned_matvec(graph, sr, mesh, strategy: str = "auto",
     cols = graph.rows.astype(np.int64)
     pm = partition(rows, cols, vals, choice.plan.shape, choice.grid, fmt, sr,
                    plan=choice.plan)
+    if topology == "auto":
+        topology, merge_order = choice.merge, choice.merge_order
     maker = (make_distributed_batched_matvec if batched
              else make_distributed_matvec)
-    fn = maker(mesh, pm, sr, choice.strategy, kernel=kernel)
+    fn = maker(mesh, pm, sr, choice.strategy, kernel=kernel,
+               topology=topology, merge_order=merge_order or "rc")
     return pm, fn, choice
 
 

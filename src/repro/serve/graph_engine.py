@@ -28,9 +28,12 @@ Serving-side optimizations:
   Fig.-3 strategy + balance mode with the lowest estimated per-device
   Load/Kernel/Retrieve cost for this graph's degree histogram; a fixed
   ``"row"``/``"col"``/``"2d"`` (optionally ``:rows``/``:nnz``) pins it.
-  The decision is recorded as ``server.partition_choice`` and drives
-  ``partitioned_matvec()`` (the mesh execution path); it never changes
-  answers, so it is deliberately NOT part of the cache key.
+  The same pass prices the Merge phase per interconnect topology
+  (core.collectives: flat/ring/tree/staged2d, bytes-on-wire α-β model)
+  and records the cheapest as ``partition_choice.merge``.  The decision
+  drives ``partitioned_matvec()`` (the mesh execution path); it never
+  changes answers — collectives are bit-identical by construction — so
+  it is deliberately NOT part of the cache key.
 
 * **pipelined flush** — traversal misses drain in fixed-size buckets
   through the bucket pipeline (graphs.multi.traverse_multi_buckets over
@@ -283,12 +286,16 @@ class GraphQueryServer:
         return self._partition_choice
 
     def partitioned_matvec(self, algorithm: str, mesh, kernel: str = "spmv",
-                           batched: bool = False):
+                           batched: bool = False, topology: str = "auto"):
         """The mesh execution path for this server's planned partition:
         partition the graph for ``algorithm``'s semiring per
         ``partition_choice`` and build the distributed matvec
-        (graphs.multi.partitioned_matvec).  Returns ``(pm, fn, choice)``;
-        ``pm.plan`` owns the shard/unshard layout helpers."""
+        (graphs.multi.partitioned_matvec).  The Merge collective rides
+        the same choice — ``topology="auto"`` runs whichever of
+        flat/ring/tree/staged2d the wire-cost model picked alongside the
+        partition (``partition_choice.merge``); a fixed name pins it.
+        Returns ``(pm, fn, choice)``; ``pm.plan`` owns the shard/unshard
+        layout helpers."""
         from repro.graphs.multi import partitioned_matvec as _pmv
 
         if algorithm == "bfs":
@@ -304,8 +311,13 @@ class GraphQueryServer:
         else:
             raise ValueError(f"unknown algorithm {algorithm!r}")
         c = self.partition_choice
+        if topology == "auto":
+            topology, order = c.merge, c.merge_order
+        else:
+            order = "rc"
         return _pmv(self.graph, sr, mesh, strategy=c.strategy,
-                    balance=c.balance, kernel=kernel, batched=batched, **kw)
+                    balance=c.balance, kernel=kernel, batched=batched,
+                    topology=topology, merge_order=order, **kw)
 
     # ------------------------------------------------------------------
     def mutate(self, delta, max_imbalance: float = 1.5) -> Dict[str, Any]:

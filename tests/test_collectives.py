@@ -1,0 +1,136 @@
+"""core.collectives plan construction + graphs.cost_model wire pricing —
+the single-process half of the merge-collective coverage (bit-equality
+on a real mesh lives in tests/test_distributed.py subprocess workers)."""
+import numpy as np
+import pytest
+
+from repro.core.collectives import (
+    MERGE_FAMILIES, MergePlan, plan_merge, prime_factors,
+)
+from repro.graphs.cost_model import (
+    HOST_HOP, MERGE_ALPHA, choose_merge, choose_partition, merge_wire_cost,
+)
+
+
+def test_prime_factors():
+    assert prime_factors(1) == ()
+    assert prime_factors(2) == (2,)
+    assert prime_factors(8) == (2, 2, 2)
+    assert prime_factors(12) == (2, 2, 3)
+    assert prime_factors(7) == (7,)
+
+
+def test_plan_merge_row_is_none():
+    for topology in MERGE_FAMILIES:
+        assert plan_merge("row", (2, 4), topology) is None
+
+
+@pytest.mark.parametrize("mesh", [(2, 4), (4, 3), (1, 6), (3, 1)])
+def test_plan_merge_stage_products(mesh):
+    """Tree/staged stage factors must multiply back to the merge-axis
+    size — the invariant that makes chunk g land on device g."""
+    r, c = mesh
+    for strategy, d in [("col", r * c), ("2d", c)]:
+        for topology in ("tree", "staged2d"):
+            plan = plan_merge(strategy, mesh, topology)
+            assert plan.axis_size == d
+            prod = 1
+            for st in plan.stages:
+                prod *= st.factor
+            assert prod == d, (strategy, topology, plan.stages)
+
+
+def test_plan_merge_cr_fixup_is_transpose_permutation():
+    r, c = 2, 4
+    plan = plan_merge("col", (r, c), "staged2d", order="cr")
+    assert plan.fixup is not None
+    srcs = [s for s, _ in plan.fixup]
+    dsts = [d for _, d in plan.fixup]
+    assert sorted(srcs) == list(range(r * c))   # a true permutation
+    assert sorted(dsts) == list(range(r * c))
+    assert dict(plan.fixup)[1 * c + 2] == 2 * r + 1   # (r=1,c=2) transposed
+    # canonical rc order needs no fixup
+    assert plan_merge("col", (r, c), "staged2d", order="rc").fixup is None
+
+
+def test_plan_merge_rejects_unknowns():
+    with pytest.raises(ValueError):
+        plan_merge("col", (2, 4), "torus")
+    with pytest.raises(ValueError):
+        plan_merge("col", (2, 4), "staged2d", order="zz")
+    with pytest.raises(ValueError):
+        MergePlan("torus", "dc", 4)
+
+
+def test_wire_cost_telescoping_invariant():
+    """Every direct topology moves exactly (1 - 1/d)·M elements — the
+    bandwidth-optimal reduce-scatter floor; flat pays HOST_HOP times
+    that for bouncing through the host."""
+    m = 4096.0
+    for mesh, strategy, d in [((2, 4), "col", 8), ((2, 4), "2d", 4),
+                              ((4, 3), "col", 12), ((4, 3), "2d", 3)]:
+        floor = (1 - 1 / d) * m
+        flat = merge_wire_cost(strategy, mesh, m, "flat")
+        assert flat["wire"] == pytest.approx(HOST_HOP * floor)
+        assert flat["steps"] == 1
+        for topology in ("ring", "tree", "staged2d"):
+            cost = merge_wire_cost(strategy, mesh, m, topology)
+            assert cost["wire"] == pytest.approx(floor), (mesh, strategy,
+                                                          topology)
+            assert cost["wire"] < flat["wire"]
+    # the cr exchange order pays one extra M/d relayout hop + one step
+    rc = merge_wire_cost("col", (2, 4), m, "staged2d", "rc")
+    cr = merge_wire_cost("col", (2, 4), m, "staged2d", "cr")
+    assert cr["wire"] == pytest.approx(rc["wire"] + m / 8)
+    assert cr["steps"] == rc["steps"] + 1
+
+
+def test_wire_cost_step_counts():
+    m = 1024.0
+    assert merge_wire_cost("col", (2, 4), m, "ring")["steps"] == 7
+    assert merge_wire_cost("col", (2, 4), m, "tree")["steps"] == 3   # 2·2·2
+    assert merge_wire_cost("col", (2, 4), m, "staged2d")["steps"] == 4  # 1+3
+    assert merge_wire_cost("col", (4, 3), m, "tree")["steps"] == 4   # 2·2·3
+    assert merge_wire_cost("2d", (2, 4), m, "tree")["steps"] == 2
+    assert merge_wire_cost("row", (2, 4), m, "tree") == \
+        {"wire": 0.0, "steps": 0, "score": 0.0}
+
+
+def test_choose_merge_never_worse_than_flat():
+    for mesh in [(2, 4), (4, 3), (1, 8)]:
+        for strategy in ("row", "col", "2d"):
+            for m in (64.0, 4096.0):
+                topo, order, cost = choose_merge(strategy, mesh, m)
+                flat = merge_wire_cost(strategy, mesh, m, "flat")
+                assert cost["score"] <= flat["score"], (mesh, strategy, m)
+
+
+def test_choose_merge_tiny_payload_keeps_flat():
+    """When M is so small that α (per-step latency) dominates, the
+    host-path single step wins and flat must survive — ties and the row
+    strategy resolve to flat because it is listed first with strict <."""
+    topo, order, cost = choose_merge("col", (2, 4), 8.0)
+    flat = merge_wire_cost("col", (2, 4), 8.0, "flat")
+    assert topo == "flat" and cost["score"] == flat["score"]
+    assert choose_merge("row", (2, 4), 1e6)[0] == "flat"
+    # and at real sizes a direct topology takes over
+    assert choose_merge("col", (2, 4), 100 * MERGE_ALPHA)[0] != "flat"
+
+
+def test_choose_partition_records_merge_choice():
+    rng = np.random.default_rng(0)
+    n = 256
+    rows = rng.integers(0, n, 3000)
+    cols = rng.integers(0, n, 3000)
+    choice = choose_partition(rows, cols, (n, n), n_devices=8, grid2d=(2, 4))
+    assert choice.merge in MERGE_FAMILIES
+    cost = choice.costs[(choice.strategy, choice.balance)]
+    assert cost["merge"] == choice.merge
+    assert cost["merge_order"] == choice.merge_order
+    assert cost["wire_bytes"] >= 0.0
+    assert {"merge_wire", "merge_steps", "wire_bytes"} <= set(cost)
+    # every candidate row in the table is priced, not just the winner
+    for (strategy, _), c in choice.costs.items():
+        assert "wire_bytes" in c and c["merge"] in MERGE_FAMILIES
+        if strategy == "row":
+            assert c["merge_wire"] == 0.0

@@ -264,3 +264,142 @@ def test_pipelined_iteration_matches_blocking_8dev():
                          capture_output=True, text=True, timeout=900)
     assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
     assert "PIPELINE_OK 12" in res.stdout, res.stdout
+
+
+COLLECTIVES_WORKER = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import *
+from repro.core.distributed import make_distributed_matvec
+
+rng = np.random.default_rng(6)
+n = 128
+dense_np = (rng.random((n, n)) < 0.08).astype(np.float32) * rng.integers(1, 9, (n, n))
+rows, cols = np.nonzero(dense_np)
+vals = dense_np[rows, cols].astype(np.float32)
+mesh = jax.make_mesh((2, 4), ("dr", "dc"))
+
+checked = 0
+for sr in (PLUS_TIMES, MIN_PLUS, PLUS_AND):
+    if sr.name == "min_plus":
+        dense = np.where(dense_np != 0, dense_np, np.inf).astype(np.float32)
+        x = np.where(rng.random(n) < 0.3, rng.integers(0, 9, n), np.inf).astype(np.float32)
+        v = vals; fill = np.inf
+    elif sr.name == "plus_and":
+        dense = (dense_np != 0).astype(np.int32)
+        x = (rng.random(n) < 0.3).astype(np.int32)
+        v = np.ones_like(vals, dtype=np.int32); fill = 0
+    else:
+        dense = dense_np
+        x = rng.integers(0, 9, n).astype(np.float32)   # integer-valued:
+        v = vals; fill = 0.0                           # ⊕ order-exact
+    oracle = np.asarray(sr.matvec(jnp.asarray(dense, sr.dtype),
+                                  jnp.asarray(x, sr.dtype)))
+    for strategy, grid in [("row", (8, 1)), ("col", (1, 8)), ("2d", (2, 4))]:
+        for balance in ("rows", "nnz"):
+            pm = partition(rows, cols, v, (n, n), grid, "csr", sr,
+                           balance=balance)
+            xs = jnp.asarray(pm.plan.shard_input_vector(x, fill), sr.dtype)
+            y_flat = None
+            topos = [("flat", "rc"), ("ring", "rc"), ("tree", "rc"),
+                     ("staged2d", "rc")]
+            if strategy == "col":
+                topos.append(("staged2d", "cr"))
+            for topology, order in topos:
+                fn = make_distributed_matvec(mesh, pm, sr, strategy,
+                                             topology=topology,
+                                             merge_order=order)
+                y = pm.plan.unshard_output_vector(
+                    np.asarray(jax.jit(fn)(pm.parts, xs)))
+                tag = f"{sr.name}/{strategy}/{balance}/{topology}:{order}"
+                np.testing.assert_array_equal(y, oracle, err_msg=tag)
+                if y_flat is None:
+                    y_flat = y
+                else:   # bit-identical to the flat merge, not just close
+                    np.testing.assert_array_equal(y, y_flat, err_msg=tag)
+                checked += 1
+print(f"COLLECTIVES_OK {checked}")
+"""
+
+
+@pytest.mark.slow
+def test_merge_collectives_bit_equal_8dev():
+    """core.collectives: ring/tree/staged-2D merges must be bit-identical
+    to the flat merge AND the dense oracle for every strategy x balance x
+    semiring (psum, pmin, and the plus_and counting semiring) — integer
+    data makes every ⊕ order exact, so equality is == not allclose."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = REPO_SRC + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run([sys.executable, "-c", COLLECTIVES_WORKER], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
+    # 3 semirings x (row,col,2d) x 2 balances x 4 topologies (+1 cr on col)
+    assert "COLLECTIVES_OK 78" in res.stdout, res.stdout
+
+
+COLLECTIVES_NPO2_WORKER = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=12"
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import *
+from repro.core.distributed import make_distributed_matvec
+
+rng = np.random.default_rng(9)
+n = 192    # divisible by 12 for the col strategy's flat-axis chunks
+dense_np = (rng.random((n, n)) < 0.06).astype(np.float32) * rng.integers(1, 9, (n, n))
+rows, cols = np.nonzero(dense_np)
+vals = dense_np[rows, cols].astype(np.float32)
+mesh = jax.make_mesh((4, 3), ("dr", "dc"))   # dc=3: odd-radix merge axis
+
+checked = 0
+for sr in (PLUS_TIMES, MIN_PLUS):
+    if sr.name == "min_plus":
+        dense = np.where(dense_np != 0, dense_np, np.inf).astype(np.float32)
+        x = np.where(rng.random(n) < 0.3, rng.integers(0, 9, n), np.inf).astype(np.float32)
+        v = vals; fill = np.inf
+    else:
+        dense = dense_np
+        x = rng.integers(0, 9, n).astype(np.float32)
+        v = vals; fill = 0.0
+    oracle = np.asarray(sr.matvec(jnp.asarray(dense, sr.dtype),
+                                  jnp.asarray(x, sr.dtype)))
+    for strategy, grid in [("col", (1, 12)), ("2d", (4, 3))]:
+        pm = partition(rows, cols, v, (n, n), grid, "csr", sr, balance="nnz")
+        xs = jnp.asarray(pm.plan.shard_input_vector(x, fill), sr.dtype)
+        y_flat = None
+        topos = [("flat", "rc"), ("ring", "rc"), ("tree", "rc"),
+                 ("staged2d", "rc")]
+        if strategy == "col":
+            topos.append(("staged2d", "cr"))
+        for topology, order in topos:
+            fn = make_distributed_matvec(mesh, pm, sr, strategy,
+                                         topology=topology,
+                                         merge_order=order)
+            y = pm.plan.unshard_output_vector(
+                np.asarray(jax.jit(fn)(pm.parts, xs)))
+            tag = f"{sr.name}/{strategy}/{topology}:{order}"
+            np.testing.assert_array_equal(y, oracle, err_msg=tag)
+            if y_flat is None:
+                y_flat = y
+            else:
+                np.testing.assert_array_equal(y, y_flat, err_msg=tag)
+            checked += 1
+print(f"COLLECTIVES_NPO2_OK {checked}")
+"""
+
+
+@pytest.mark.slow
+def test_merge_collectives_12dev_non_power_of_two():
+    """12 devices on a (4, 3) mesh — past the 8-device workers and with a
+    non-power-of-two merge axis: the tree schedule gets a factor-3 radix
+    stage (col: 12 = 2*2*3; 2d: the dc=3 axis) and the 12-hop ring /
+    staged exchanges must still land chunk g on device g, bit-identical
+    to the flat merge and the dense oracle."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = REPO_SRC + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run([sys.executable, "-c", COLLECTIVES_NPO2_WORKER],
+                         env=env, capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
+    # 2 semirings x (col: 5 topologies + 2d: 4 topologies)
+    assert "COLLECTIVES_NPO2_OK 18" in res.stdout, res.stdout

@@ -63,3 +63,82 @@ def test_repo_docs_have_no_broken_links():
     root = TOOLS_DIR.parent
     for md in [root / "README.md", *sorted((root / "docs").rglob("*.md"))]:
         assert cl.broken_links(md, root) == [], md
+
+
+def _load(name):
+    spec = importlib.util.spec_from_file_location(
+        name, TOOLS_DIR / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_bench_trajectory_fold_min_of_reps():
+    bt = _load("bench_trajectory")
+    rep1 = [{"bench": "b", "case": "c", "wall_ms": 3.0, "checksum": "aa",
+             "edges_per_s": 100.0},
+            {"bench": "b", "case": "d", "wall_ms": 1.0, "imbalance": 1.2}]
+    rep2 = [{"bench": "b", "case": "c", "wall_ms": 2.0, "checksum": "aa",
+             "edges_per_s": 150.0},
+            {"bench": "b", "case": "d", "wall_ms": 4.0, "imbalance": 1.3}]
+    rows = bt.fold_reps([rep1, rep2])
+    by = {bt.row_key(r): r for r in rows}
+    assert by[("b", "c")]["wall_ms"] == 2.0         # min over reps
+    assert by[("b", "d")]["wall_ms"] == 1.0
+    assert by[("b", "c")]["edges_per_s"] == 150.0   # throughput: max
+    assert by[("b", "c")]["checksum"] == "aa"       # strings kept + checked
+    assert by[("b", "d")]["imbalance"] == 1.2       # other numerics: rep 1
+
+
+def test_bench_trajectory_rejects_result_drift():
+    import pytest
+    bt = _load("bench_trajectory")
+    rep1 = [{"bench": "b", "case": "c", "wall_ms": 1.0, "checksum": "aa"}]
+    rep2 = [{"bench": "b", "case": "c", "wall_ms": 1.0, "checksum": "bb"}]
+    with pytest.raises(SystemExit):              # checksum drift != noise
+        bt.fold_reps([rep1, rep2])
+    with pytest.raises(SystemExit):              # row-set drift
+        bt.fold_reps([rep1, rep1 + [{"bench": "b", "case": "x"}]])
+
+
+def test_bench_trajectory_series_validate_latest(tmp_path, capsys):
+    import json
+    bt = _load("bench_trajectory")
+    good = {"pr": 3, "reps": 2,
+            "rows": [{"bench": "b", "case": "c", "wall_ms": 1.0}]}
+    (tmp_path / "BENCH_PR3.json").write_text(json.dumps(good))
+    good5 = dict(good, pr=5)
+    (tmp_path / "BENCH_PR5.json").write_text(json.dumps(good5))
+    assert bt.main(["validate", "--root", str(tmp_path)]) == 0
+    assert bt.main(["latest", "--root", str(tmp_path)]) == 0
+    assert capsys.readouterr().out.strip().endswith("BENCH_PR5.json")
+    assert bt.main(["latest", "--root", str(tmp_path), "--before", "5"]) == 0
+    assert capsys.readouterr().out.strip().endswith("BENCH_PR3.json")
+    # pr field / filename mismatch and empty rows both fail validate
+    (tmp_path / "BENCH_PR7.json").write_text(
+        json.dumps({"pr": 6, "reps": 1, "rows": []}))
+    assert bt.main(["validate", "--root", str(tmp_path)]) == 1
+
+
+def test_committed_trajectory_series_is_valid():
+    """The repo-root BENCH_PR*.json series must always validate (the CI
+    validate job, in-process)."""
+    bt = _load("bench_trajectory")
+    points = bt.series()
+    assert points, "no committed BENCH_PR*.json trajectory points"
+    for pr, path in points:
+        assert bt.validate_point(pr, path) == [], path
+
+
+def test_compare_bench_check_timings():
+    cb = _load("compare_bench")
+    prev = [{"bench": "b", "case": "c", "wall_ms": 1.0, "imbalance": 1.0},
+            {"bench": "b", "case": "d", "wall_ms": 2.0}]
+    cur = [{"bench": "b", "case": "c", "wall_ms": 1.2, "imbalance": 99.0},
+           {"bench": "b", "case": "d", "wall_ms": 3.5},
+           {"bench": "b", "case": "new", "wall_ms": 9.9}]
+    regressions = cb.compare_timings(cur, prev, threshold=1.5)
+    # only b,d regressed (3.5 > 1.5*2.0); imbalance is not a *_ms metric
+    # and rows absent from the trajectory point are skipped
+    assert len(regressions) == 1 and "b,d.wall_ms" in regressions[0]
+    assert cb.compare_timings(cur, prev, threshold=2.0) == []

@@ -1,0 +1,156 @@
+"""Per-PR perf-trajectory points: append + validate the ``BENCH_PR<k>.json``
+series ROADMAP's "timing-aware perf trajectory" item calls for.
+
+    python tools/bench_trajectory.py add --pr 6 rep1.json rep2.json ...
+    python tools/bench_trajectory.py validate
+    python tools/bench_trajectory.py latest [--before 6]
+
+``add`` folds N repetitions of a ``benchmarks.run --json`` dump into one
+trajectory point: every ``*_ms`` metric keeps the **min over reps** (each
+dump row is already a median over in-process iters, so the point is a
+min-of-medians — the standard noise floor estimator on shared runners),
+``*_per_s`` throughputs keep the max (their noise floor), other numeric
+metrics keep the first rep (deterministic model outputs agree anyway),
+and every string field must agree across reps (a checksum that differs
+between reps is result drift, not noise, and fails the add).  The point
+lands at ``BENCH_PR<k>.json`` in the repo root with
+``{"pr", "reps", "rows"}``.
+
+``validate`` checks the whole committed series: filename ↔ ``pr`` field
+agreement, schema, non-empty unique row keys.  ``latest`` prints the path
+of the newest point (optionally the newest strictly before ``--before``,
+which is what CI uses to diff a PR against its predecessor via
+``tools/compare_bench.py --check-timings``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import re
+import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+POINT_RE = re.compile(r"^BENCH_PR(\d+)\.json$")
+
+
+def row_key(row: dict) -> tuple[str, str]:
+    return (str(row.get("bench", "")), str(row.get("case", "")))
+
+
+def fold_reps(reps: list[list[dict]]) -> list[dict]:
+    """Min-of-reps over ``*_ms``, max over ``*_per_s``; strings (checksums,
+    chosen labels) must agree across reps; other numerics keep rep 1."""
+    assert reps, "need at least one rep dump"
+    base = {row_key(r): dict(r) for r in reps[0]}
+    for i, rep in enumerate(reps[1:], start=2):
+        cur = {row_key(r): r for r in rep}
+        if set(cur) != set(base):
+            raise SystemExit(f"bench_trajectory: rep {i} row set differs "
+                             f"from rep 1: {sorted(set(cur) ^ set(base))}")
+        for key, row in cur.items():
+            folded = base[key]
+            for field, value in row.items():
+                if isinstance(value, (int, float)) \
+                        and not isinstance(value, bool):
+                    if field.endswith("_ms"):
+                        folded[field] = min(folded[field], value)
+                    elif field.endswith("_per_s"):
+                        folded[field] = max(folded[field], value)
+                elif folded.get(field) != value:
+                    raise SystemExit(
+                        f"bench_trajectory: rep {i} disagrees on "
+                        f"{key[0]},{key[1]}.{field}: "
+                        f"{folded.get(field)!r} vs {value!r} (result "
+                        f"drift between reps, not timing noise)")
+    return [base[k] for k in sorted(base)]
+
+
+def series(root: pathlib.Path = REPO_ROOT) -> list[tuple[int, pathlib.Path]]:
+    """The committed trajectory, ordered by PR number."""
+    points = []
+    for path in root.iterdir():
+        m = POINT_RE.match(path.name)
+        if m:
+            points.append((int(m.group(1)), path))
+    return sorted(points)
+
+
+def validate_point(pr: int, path: pathlib.Path) -> list[str]:
+    problems = []
+    try:
+        data = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path.name}: unreadable ({e})"]
+    if data.get("pr") != pr:
+        problems.append(f"{path.name}: pr field {data.get('pr')!r} "
+                        f"does not match filename")
+    if not isinstance(data.get("reps"), int) or data["reps"] < 1:
+        problems.append(f"{path.name}: bad reps {data.get('reps')!r}")
+    rows = data.get("rows")
+    if not isinstance(rows, list) or not rows:
+        return problems + [f"{path.name}: empty or missing rows"]
+    seen = set()
+    for row in rows:
+        key = row_key(row)
+        if not key[0]:
+            problems.append(f"{path.name}: row without bench name: {row}")
+        elif key in seen:
+            problems.append(f"{path.name}: duplicate row {key}")
+        seen.add(key)
+    return problems
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser()
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    p_add = sub.add_parser("add")
+    p_add.add_argument("reps", nargs="+",
+                       help="benchmarks.run --json dumps (one per rep)")
+    p_add.add_argument("--pr", type=int, required=True)
+    p_add.add_argument("--out", default=None,
+                       help="output path (default BENCH_PR<k>.json in root)")
+    p_val = sub.add_parser("validate")
+    p_val.add_argument("--root", default=str(REPO_ROOT))
+    p_lat = sub.add_parser("latest")
+    p_lat.add_argument("--root", default=str(REPO_ROOT))
+    p_lat.add_argument("--before", type=int, default=None,
+                       help="newest point with pr strictly below this")
+    args = ap.parse_args(argv)
+
+    if args.cmd == "add":
+        reps = [json.loads(pathlib.Path(p).read_text()) for p in args.reps]
+        rows = fold_reps(reps)
+        out = pathlib.Path(args.out) if args.out \
+            else REPO_ROOT / f"BENCH_PR{args.pr}.json"
+        out.write_text(json.dumps(
+            {"pr": args.pr, "reps": len(reps), "rows": rows},
+            indent=2, default=float) + "\n")
+        print(f"bench_trajectory: wrote {len(rows)} rows "
+              f"(min of {len(reps)} reps) to {out}")
+        return 0
+
+    root = pathlib.Path(args.root)
+    points = series(root)
+    if args.cmd == "validate":
+        problems = []
+        for pr, path in points:
+            problems += validate_point(pr, path)
+        for p in problems:
+            print(f"bench_trajectory: FAIL {p}")
+        print(f"bench_trajectory: {len(points)} point(s), "
+              f"{len(problems)} problem(s)")
+        return 1 if problems else 0
+
+    # latest
+    if args.before is not None:
+        points = [(pr, p) for pr, p in points if pr < args.before]
+    if not points:
+        print("bench_trajectory: no trajectory points", file=sys.stderr)
+        return 1
+    print(points[-1][1])
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -18,6 +18,19 @@ New rows in the current dump pass (adding benchmarks never breaks the
 gate) but are reported, with a reminder to re-baseline.  After an
 intentional change, regenerate with ``--update-baseline`` and commit the
 result (see README § CI).
+
+A second, **opt-in** mode compares timings against the perf trajectory
+(tools/bench_trajectory.py points)::
+
+    python tools/compare_bench.py bench-quick.json \
+        --check-timings --trajectory BENCH_PR5.json [--threshold 1.5]
+
+Every ``*_ms`` metric on a row both files share is flagged when the
+current value exceeds ``threshold ×`` the trajectory point's.  The
+threshold is deliberately loose (1.5× default) because CI runners are
+2-core shared machines; CI wires this as a **non-blocking warning step**
+(continue-on-error), never a tier-1 assert — exit code 2 distinguishes
+"timing regressions found" from mode-1's hard failures (exit 1).
 """
 from __future__ import annotations
 
@@ -61,16 +74,63 @@ def compare(current: list[dict], baseline: list[dict]) -> list[str]:
     return failures
 
 
+def compare_timings(current: list[dict], trajectory: list[dict],
+                    threshold: float = 1.5) -> list[str]:
+    """Relative-regression report: ``*_ms`` metrics on shared rows that
+    exceed ``threshold ×`` the trajectory point's value."""
+    prev = {row_key(r): r for r in trajectory}
+    regressions = []
+    for row in sorted(current, key=row_key):
+        ref = prev.get(row_key(row))
+        if ref is None:
+            continue
+        for field, value in row.items():
+            if not field.endswith("_ms"):
+                continue
+            if not isinstance(value, (int, float)):
+                continue
+            base = ref.get(field)
+            if isinstance(base, (int, float)) and base > 0 \
+                    and value > threshold * base:
+                regressions.append(
+                    f"{row['bench']},{row['case']}.{field}: "
+                    f"{base:.3f} -> {value:.3f} "
+                    f"({value / base:.2f}x > {threshold:.2f}x)")
+    return regressions
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("current", help="benchmarks.run --json output to check")
     ap.add_argument("--baseline", default=str(DEFAULT_BASELINE))
     ap.add_argument("--update-baseline", action="store_true",
                     help="rewrite the baseline from the current rows")
+    ap.add_argument("--check-timings", action="store_true",
+                    help="opt-in: diff *_ms metrics against --trajectory "
+                         "(exit 2 on regressions; CI runs this "
+                         "non-blocking)")
+    ap.add_argument("--trajectory", default=None,
+                    help="bench_trajectory point (BENCH_PR<k>.json) to "
+                         "compare timings against")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="relative slowdown tolerated before flagging")
     args = ap.parse_args(argv)
 
     current = json.loads(pathlib.Path(args.current).read_text())
     baseline_path = pathlib.Path(args.baseline)
+
+    if args.check_timings:
+        if not args.trajectory:
+            ap.error("--check-timings requires --trajectory")
+        point = json.loads(pathlib.Path(args.trajectory).read_text())
+        regressions = compare_timings(current, point.get("rows", point),
+                                      args.threshold)
+        for r in regressions:
+            print(f"compare_bench: SLOWER {r}")
+        print(f"compare_bench: timings vs {args.trajectory} "
+              f"(threshold {args.threshold}x): "
+              f"{len(regressions)} regression(s)")
+        return 2 if regressions else 0
 
     if args.update_baseline:
         baseline_path.write_text(

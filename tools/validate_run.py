@@ -1,0 +1,86 @@
+"""Dryrun validation: prove "same results" in one command.
+
+    python tools/validate_run.py [--only analytics,table4,...] [--full]
+
+Re-runs the quick benchmark smoke set in a subprocess (``benchmarks.run
+--quick --json``), then diffs the emitted row names + integer result
+checksums against the committed ``benchmarks/baseline.json`` using the
+same logic as the CI gate (tools/compare_bench.py).  Timings are never
+compared — this is the correctness half of a "same results, faster"
+claim; pair it with ``compare_bench --check-timings`` for the other
+half.  Exit is non-zero on any drift (missing row / changed checksum)
+or if the benchmark run itself fails.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import tempfile
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO_ROOT / "tools"))
+import compare_bench  # noqa: E402
+
+#: The CI bench-smoke module set: every module with asserted, checksummed,
+#: quick-mode-stable rows (the same list .github/workflows/ci.yml runs).
+SMOKE_MODULES = ("analytics,table4,pipeline_overlap,partition_balance,"
+                 "dynamic_updates,merge_collectives")
+
+
+def run_benches(only: str, quick: bool, out: pathlib.Path) -> int:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO_ROOT / "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    cmd = [sys.executable, "-m", "benchmarks.run",
+           "--only", only, "--json", str(out)]
+    if quick:
+        cmd.insert(3, "--quick")
+    print(f"validate_run: {' '.join(cmd)}", flush=True)
+    return subprocess.run(cmd, cwd=REPO_ROOT, env=env).returncode
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=SMOKE_MODULES,
+                    help="comma-separated module substrings to re-run")
+    ap.add_argument("--full", action="store_true",
+                    help="full-size benchmarks instead of --quick "
+                         "(baseline rows are quick-mode; only use with a "
+                         "matching --baseline)")
+    ap.add_argument("--baseline",
+                    default=str(compare_bench.DEFAULT_BASELINE))
+    ap.add_argument("--keep-json", default=None,
+                    help="also write the fresh dump to this path")
+    args = ap.parse_args(argv)
+
+    with tempfile.TemporaryDirectory(prefix="validate_run.") as tmp:
+        dump = pathlib.Path(tmp) / "bench.json"
+        rc = run_benches(args.only, not args.full, dump)
+        if rc:
+            print(f"validate_run: benchmark run FAILED (exit {rc})")
+            return rc
+        current = json.loads(dump.read_text())
+        if args.keep_json:
+            pathlib.Path(args.keep_json).write_text(dump.read_text())
+
+    baseline = json.loads(pathlib.Path(args.baseline).read_text())["rows"]
+    failures = compare_bench.compare(current, baseline)
+    for f in failures:
+        print(f"validate_run: DRIFT {f}")
+    known = {compare_bench.row_key(r) for r in baseline}
+    new = [compare_bench.row_key(r) for r in compare_bench.reduce_rows(current)
+           if compare_bench.row_key(r) not in known]
+    for key in new[:20]:
+        print(f"validate_run: new row (unvalidated): {key[0]},{key[1]}")
+    verdict = "DRIFT DETECTED" if failures else "results match baseline"
+    print(f"validate_run: {len(current)} fresh rows vs "
+          f"{len(baseline)} baseline rows — {verdict}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
