@@ -25,6 +25,7 @@ MODULES = [
     "dynamic_updates",
     "merge_collectives",
     "partition_balance",
+    "phase_trace",
     "phases",
     "pipeline_overlap",
     "table4_apps",

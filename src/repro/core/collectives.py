@@ -59,6 +59,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.semiring import Semiring
+from repro.obs import trace
 
 Array = jax.Array
 
@@ -123,6 +124,40 @@ class MergePlan:
             raise ValueError(f"unknown merge topology {self.topology!r}; "
                              f"expected one of {MERGE_FAMILIES}")
 
+    # Self-describing accounting: the plan knows its own α (steps) and β
+    # (elements-on-wire) shape, so the tracing layer can annotate Merge
+    # spans without reaching up into graphs.cost_model (which prices the
+    # same quantities *with* hop/link weights — merge_wire_cost's
+    # unit-weight path must agree with these, pinned in tests/test_obs.py).
+
+    @property
+    def n_steps(self) -> int:
+        """Latency rounds this schedule executes (the α count: ppermute
+        round-sets for ring/tree/staged, one bulk exchange for flat)."""
+        if self.topology == "flat":
+            return 1
+        if self.topology == "ring":
+            return self.axis_size - 1
+        steps = sum(st.factor - 1 for st in self.stages)
+        return steps + (1 if self.fixup is not None else 0)
+
+    def wire_elements(self, m: float) -> float:
+        """Elements each device ships over the fabric to merge an
+        ``m``-element per-device partial under this schedule (the β term,
+        hop-unweighted: every reduce-scatter moves ``(1-1/d)·m`` plus the
+        staged-order fixup's relayout chunk; flat's host bounce doubling
+        is the cost model's hop weight, not the element count)."""
+        d = self.axis_size
+        if self.topology in ("flat", "ring"):
+            return (d - 1) / d * float(m)
+        wire, live = 0.0, float(m)
+        for st in self.stages:
+            wire += (st.factor - 1) / st.factor * live
+            live /= st.factor
+        if self.fixup is not None:
+            wire += live
+        return wire
+
 
 def _axis_radix_stages(axis_name: str, axis_size: int) -> list[MergeStage]:
     """Prime-radix stage list for one mesh axis, most-significant digit
@@ -151,7 +186,30 @@ def plan_merge(strategy: str, mesh_shape: Tuple[int, int],
     * ``2d``   — Merge spans ``axis_c`` only (the Load already gathered
       over ``axis_r``); staged2d degenerates to the radix schedule over
       that single axis (== tree).
+
+    With a tracer installed (repro.obs.trace), each planning call records
+    a ``collective/plan_merge`` span carrying the schedule's self-reported
+    accounting (axis size, step count) — the *execution* cost of the
+    collective is observed by the ``phase/retrieve_merge`` span of the
+    closure it runs inside (the merge itself executes in a shard_map body,
+    where host-side spans are meaningless).
     """
+    t = trace.active()
+    if t is None:
+        return _build_merge_plan(strategy, mesh_shape, topology, axis_names,
+                                 order)
+    with t.span("collective/plan_merge", strategy=strategy,
+                topology=topology, order=order) as sp:
+        plan = _build_merge_plan(strategy, mesh_shape, topology, axis_names,
+                                 order)
+        if plan is not None:
+            sp.set(axis_size=plan.axis_size, steps=plan.n_steps)
+    return plan
+
+
+def _build_merge_plan(strategy: str, mesh_shape: Tuple[int, int],
+                      topology: str, axis_names: Sequence[str],
+                      order: str) -> Optional[MergePlan]:
     if strategy == "row":
         return None
     if topology not in MERGE_FAMILIES:

@@ -64,6 +64,7 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core.collectives import merge as merge_collective
 from repro.core.collectives import plan_merge
+from repro.obs import trace
 from repro.core.partition import PartitionedMatrix
 from repro.core.semiring import Semiring
 from repro.core.spgemm import apply_mask, spgemm_masked
@@ -454,6 +455,29 @@ def make_distributed_spgemm(
     return fn
 
 
+def _traced_phase(fn, name: str, attrs: dict):
+    """Wrap one phase closure for observability (repro.obs.trace).
+
+    Tracing disabled (the default): one module-global None check, then
+    straight through to the jitted closure — async dispatch untouched.
+    Tracing enabled: the call runs inside a span and blocks until ready
+    *inside* it, so the span measures the phase's device time — the
+    paper's blocking-DMA accounting (benchmarks.phases' schedule), which
+    is what makes per-phase span sums comparable to wall time and to
+    graphs.cost_model predictions. The extra sync moves host timing only;
+    values are bit-identical either way."""
+    if fn is None:
+        return None
+
+    def run(*args):
+        t = trace.active()
+        if t is None:
+            return fn(*args)
+        with t.span(name, **attrs):
+            return jax.block_until_ready(fn(*args))
+    return run
+
+
 def build_phase_fns(mesh: Mesh, pm: PartitionedMatrix, sr: Semiring,
                     strategy: str, kernel: str, f_local: int | None = None,
                     donate: bool = False, topology: str = "flat",
@@ -593,6 +617,37 @@ def build_phase_fns(mesh: Mesh, pm: PartitionedMatrix, sr: Semiring,
                            out_specs=(spec, spec), check_rep=False)
         fns["load"] = jax.jit(lambda parts, xs: loader(pre(xs)))
         fns["kernel"] = None          # folded into e2e - load (derived)
+
+    # Observability wrap (repro.obs.trace): every returned closure is a
+    # _traced_phase — pass-through when no tracer is installed, a
+    # blocking span named phase/<name> otherwise. Span attrs carry the
+    # wire accounting inline (core must not import graphs.cost_model):
+    # Load bytes are the elements each device assembles, Merge bytes and
+    # steps come from the MergePlan's own schedule description.
+    m_pad, n_pad = pm.shape
+    r_parts, c_parts = pm.grid
+    elem = jnp.dtype(sr.dtype).itemsize
+    load_elems = {"row": n_pad, "col": 0, "2d": n_pad // c_parts}[strategy]
+    if f_local is not None and strategy in ("row", "2d"):
+        # compressed Load: f_local (index, value) pairs per axis peer
+        load_elems = 2 * f_local * (d if strategy == "row" else r_parts)
+    mp = col_mp if strategy == "col" else col2d_mp
+    m_merge = {"row": 0, "col": m_pad, "2d": m_pad // r_parts}[strategy]
+    wire = mp.wire_elements(m_merge) if strategy != "row" else 0.0
+    steps = mp.n_steps if strategy != "row" else 0
+    base = {"strategy": strategy, "kernel": kernel, "topology": topology,
+            "devices": d}
+    attrs = {
+        "load": {**base, "phase": "load", "bytes": load_elems * elem},
+        "kernel": {**base, "phase": "kernel"},
+        "retrieve_merge": {**base, "phase": "retrieve_merge",
+                           "bytes": wire * elem, "steps": steps},
+        "feedback": {**base, "phase": "feedback"},
+        "e2e": {**base, "phase": "e2e",
+                "bytes": (load_elems + wire) * elem},
+    }
+    for name in ("load", "kernel", "retrieve_merge", "feedback", "e2e"):
+        fns[name] = _traced_phase(fns[name], f"phase/{name}", attrs[name])
     return fns
 
 

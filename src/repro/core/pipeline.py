@@ -51,6 +51,8 @@ from typing import Any, Callable, Iterable, Mapping, Optional, Sequence
 
 import jax
 
+from repro.obs import trace
+
 Array = jax.Array
 #: A build_phase_fns product: phase name -> closure (or None when the
 #: strategy folds that phase away). See repro.core.distributed.
@@ -112,6 +114,14 @@ def iterate_phases(fns: PhaseFns, parts, x0: Array, n_iters: int,
     """
     if n_iters < 0:
         raise ValueError(f"n_iters must be >= 0, got {n_iters}")
+    # Observability: one None check when tracing is disabled. With a
+    # tracer installed the individual phases already trace themselves
+    # (build_phase_fns wraps each closure in a blocking span — the
+    # pipeline degenerates to the blocking schedule while observed, by
+    # design: that is the schedule whose per-phase sums mean anything);
+    # here we only add the backpressure-drain windows, the part of the
+    # overlap no phase span can see.
+    t = trace.active()
     x = x0
     if depth <= 0:
         for _ in range(n_iters):
@@ -123,8 +133,16 @@ def iterate_phases(fns: PhaseFns, parts, x0: Array, n_iters: int,
         x = run_phases_once(fns, parts, x)
         in_flight.append(x)
         while len(in_flight) > depth:
-            jax.block_until_ready(in_flight.popleft())
-    return jax.block_until_ready(x)
+            head = in_flight.popleft()
+            if t is None:
+                jax.block_until_ready(head)
+            else:
+                with t.span("pipeline/drain", depth=depth):
+                    jax.block_until_ready(head)
+    if t is None:
+        return jax.block_until_ready(x)
+    with t.span("pipeline/drain", depth=depth, final=True):
+        return jax.block_until_ready(x)
 
 
 def pipeline_buckets(issue: Callable[[Any], Any],
@@ -148,12 +166,33 @@ def pipeline_buckets(issue: Callable[[Any], Any],
     results: list = []
     pending: deque[tuple[Any, Any]] = deque()
     limit = max(0, depth)
-    for item in items:
-        pending.append((item, issue(item)))
-        while len(pending) > limit:
+    t = trace.active()
+    if t is None:                       # hot path: zero tracing overhead
+        for item in items:
+            pending.append((item, issue(item)))
+            while len(pending) > limit:
+                it, handle = pending.popleft()
+                results.append(materialize(it, handle))
+        while pending:
             it, handle = pending.popleft()
             results.append(materialize(it, handle))
+        return results
+
+    # Traced: the issue window (dispatch) and the materialize window (the
+    # host sync the pipeline hides) become spans, indexed by bucket.
+    n_issued = 0
+    for item in items:
+        with t.span("pipeline/issue", bucket=n_issued, depth=limit):
+            pending.append((item, issue(item)))
+        n_issued += 1
+        while len(pending) > limit:
+            it, handle = pending.popleft()
+            with t.span("pipeline/materialize",
+                        bucket=n_issued - len(pending) - 1, depth=limit):
+                results.append(materialize(it, handle))
     while pending:
         it, handle = pending.popleft()
-        results.append(materialize(it, handle))
+        with t.span("pipeline/materialize",
+                    bucket=n_issued - len(pending) - 1, depth=limit):
+            results.append(materialize(it, handle))
     return results

@@ -1,0 +1,27 @@
+"""Observability layer: phase-level tracing, process-local metrics, and
+cost-model calibration (the paper's §5 characterization methodology as a
+runtime subsystem).
+
+Three modules, all dependency-free below the core layer:
+
+* :mod:`repro.obs.trace` — structured spans (wall time, phase, strategy,
+  device count, bytes) with a Chrome-trace/Perfetto JSON exporter and a
+  **zero-overhead no-op default**: with no tracer installed, every
+  instrumentation site reduces to one ``None`` check and the shared
+  identity context manager — no allocations on the hot path.
+* :mod:`repro.obs.metrics` — counters, gauges, and streaming log-bucket
+  histograms (p50/p90/p99) behind a process-local registry; the serving
+  layer's latency accounting lives here.
+* :mod:`repro.obs.calibrate` — joins measured phase spans against
+  :func:`repro.graphs.cost_model.estimate_phase_costs` predictions and
+  reports predicted-vs-observed rank correlation per family × strategy,
+  so ``strategy="auto"``'s ordering claims are *checked*, not assumed.
+
+Instrumented sites: the four phase closures
+(:func:`repro.core.distributed.build_phase_fns`), the overlap windows
+(:mod:`repro.core.pipeline`), the Merge-collective wire accounting
+(:mod:`repro.core.collectives`), and the submit→flush→payload path
+(:mod:`repro.serve.graph_engine`).  ``benchmarks/phase_trace.py`` drives
+the whole loop and asserts traced ≡ untraced bit-identity.
+"""
+from repro.obs import calibrate, metrics, trace  # noqa: F401

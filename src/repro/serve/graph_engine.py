@@ -58,7 +58,9 @@ independent), which is how one server saturates an 8-device host.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
+import time
 from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -78,6 +80,8 @@ from repro.graphs.datasets import Graph
 from repro.graphs.engine import GraphEngine, build_engine
 from repro.graphs.multi import traverse_multi_buckets
 from repro.graphs.ppr import pagerank
+from repro.obs import trace
+from repro.obs.metrics import MetricsRegistry
 
 ALGORITHMS = ("bfs", "sssp", "ppr")
 GLOBAL_ALGORITHMS = ("pagerank", "cc", "triangles", "kcore")
@@ -102,6 +106,9 @@ class GraphRequest:
     source: int
     result: Optional[Dict[str, Any]] = None
     cached: bool = False
+    # perf_counter stamp set by submit(); flush() turns it into the
+    # per-query enqueue-wait observation (stats()["latency"]).
+    submitted_at: float = 0.0
 
 
 class LRUCache:
@@ -219,6 +226,11 @@ class GraphQueryServer:
                          "edges_deleted": 0, "entries_retained": 0,
                          "entries_invalidated": 0, "plan_repairs": 0,
                          "plan_replans": 0}
+        # Per-server latency instruments (repro.obs.metrics): enqueue
+        # wait / flush latency / bucket+payload times as streaming
+        # histograms, queue depth and LRU hit rate as gauges. Surfaced
+        # (as plain copies) under stats()["latency"].
+        self.metrics = MetricsRegistry()
 
     def _engine_key_for(self, graph: Graph) -> str:
         """Cache-key prefix for one graph snapshot under this server's
@@ -234,11 +246,25 @@ class GraphQueryServer:
 
     def stats(self) -> Dict[str, Any]:
         """One coherent counter snapshot: the server's serving/mutation
-        counters, the current snapshot version, and the LRU's
+        counters, the current snapshot version, the LRU's
         hit/miss/eviction accounting (shared caches aggregate across
-        servers)."""
-        return {**self.counters, "version": self.version,
-                "cache": self.cache.stats()}
+        servers), and a ``latency`` section — per-query enqueue wait,
+        flush latency, bucket/payload times (p50/p90/p99 streaming
+        histograms), queue depth at flush, and the LRU hit rate.
+
+        The returned structure is a **deep copy**: callers may mutate it
+        freely (or hand it to a JSON encoder) without corrupting the live
+        counters."""
+        cs = self.cache.stats()
+        snap = self.metrics.snapshot()
+        probes = cs["hits"] + cs["misses"]
+        latency: Dict[str, Any] = dict(snap["histograms"])
+        latency["queue_depth"] = snap["gauges"].get(
+            "queue_depth", {"value": 0.0, "min": 0.0, "max": 0.0,
+                            "writes": 0})
+        latency["lru_hit_rate"] = cs["hits"] / probes if probes else 0.0
+        return copy.deepcopy({**self.counters, "version": self.version,
+                              "cache": cs, "latency": latency})
 
     # ------------------------------------------------------------------
     def engine(self, algorithm: str) -> GraphEngine:
@@ -420,6 +446,7 @@ class GraphQueryServer:
         else:
             raise ValueError(f"unknown algorithm {algorithm!r}; expected one "
                              f"of {ALGORITHMS + GLOBAL_ALGORITHMS}")
+        req.submitted_at = time.perf_counter()
         self._queue.append(req)
         self.counters["submitted"] += 1
         return req
@@ -444,7 +471,26 @@ class GraphQueryServer:
         # computes; pad_to keeps one compiled runner for every bucket
         def to_payloads(bucket, res) -> Dict[int, Dict[str, Any]]:
             self.counters["batches"] += 1
-            return self._materialize(algorithm, res, bucket)
+            self.metrics.histogram("batch_size", least=1.0).observe(
+                float(len(bucket)))
+            tr = trace.active()
+            t0 = time.perf_counter()
+            if tr is None:
+                rows, iters = self._to_host(algorithm, res)
+                out = self._payloads(rows, iters, bucket)
+            else:
+                # split the bucket's wait-for-compute (the first host
+                # pull blocks on the device result) from the pure
+                # payload-dict conversion
+                with tr.span("serve/bucket_compute", algorithm=algorithm,
+                             size=len(bucket)):
+                    rows, iters = self._to_host(algorithm, res)
+                with tr.span("serve/payload", algorithm=algorithm,
+                             size=len(bucket)):
+                    out = self._payloads(rows, iters, bucket)
+            self.metrics.histogram("bucket_s").observe(
+                time.perf_counter() - t0)
+            return out
 
         results = traverse_multi_buckets(
             eng, algorithm, chunks, pipeline_depth=self.pipeline_depth,
@@ -456,10 +502,12 @@ class GraphQueryServer:
         return out
 
     @staticmethod
-    def _materialize(algorithm: str, res, sources: List[int]
-                     ) -> Dict[int, Dict[str, Any]]:
-        """One bucket's device result -> host payload dicts, keyed by source
-        (padding rows beyond ``sources`` are dropped)."""
+    def _to_host(algorithm: str, res) -> Tuple[Dict[str, np.ndarray],
+                                               np.ndarray]:
+        """Pull one bucket's device result to host arrays. The first
+        ``np.asarray`` blocks on the bucket's traversal, so this is the
+        wait-for-compute half of materialisation (traced as
+        ``serve/bucket_compute``)."""
         if algorithm == "bfs":
             rows = {"levels": np.asarray(res.levels)}
         elif algorithm == "sssp":
@@ -467,13 +515,27 @@ class GraphQueryServer:
         else:
             rows = {"rank": np.asarray(res.rank),
                     "residual": np.asarray(res.residual)}
-        iters = np.asarray(res.iterations)
+        return rows, np.asarray(res.iterations)
+
+    @staticmethod
+    def _payloads(rows: Dict[str, np.ndarray], iters: np.ndarray,
+                  sources: List[int]) -> Dict[int, Dict[str, Any]]:
+        """Host arrays -> per-source payload dicts (padding rows beyond
+        ``sources`` are dropped); the conversion half (``serve/payload``)."""
         out = {}
         for i, s in enumerate(sources):
             payload = {k: v[i] for k, v in rows.items()}
             payload["iterations"] = int(iters[i])
             out[s] = payload
         return out
+
+    @classmethod
+    def _materialize(cls, algorithm: str, res, sources: List[int]
+                     ) -> Dict[int, Dict[str, Any]]:
+        """One bucket's device result -> host payload dicts, keyed by
+        source (= _to_host + _payloads in one step)."""
+        rows, iters = cls._to_host(algorithm, res)
+        return cls._payloads(rows, iters, sources)
 
     def _run_global(self, algorithm: str) -> Dict[str, Any]:
         """One whole-graph analytics run (computed at most once per graph
@@ -515,8 +577,25 @@ class GraphQueryServer:
     def flush(self) -> List[GraphRequest]:
         """Resolve every queued request: cache -> dedup -> padded batches
         (traversal) / one shared run (global). Returns the requests in
-        submission order, results attached."""
+        submission order, results attached.
+
+        Observability per flush: queue depth and per-query enqueue wait
+        are recorded into the metrics registry (stats()["latency"]); with
+        a tracer installed each query additionally gets a retrospective
+        ``serve/enqueue_wait`` span (submit stamp → flush start) and the
+        flush itself a ``serve/flush`` span."""
+        t0 = time.perf_counter()
         queue, self._queue = self._queue, []
+        tr = trace.active()
+        reg = self.metrics
+        reg.gauge("queue_depth").set(float(len(queue)))
+        wait_h = reg.histogram("enqueue_wait_s")
+        for req in queue:
+            if req.submitted_at:
+                wait_h.observe(t0 - req.submitted_at)
+                if tr is not None:
+                    tr.add_span("serve/enqueue_wait", req.submitted_at, t0,
+                                algorithm=req.algorithm, source=req.source)
         by_alg: Dict[str, List[GraphRequest]] = {}
         for req in queue:
             by_alg.setdefault(req.algorithm, []).append(req)
@@ -573,4 +652,11 @@ class GraphQueryServer:
                     req.result = dict(fresh[req.source])
 
         self.counters["served"] += len(queue)
+        t1 = time.perf_counter()
+        reg.histogram("flush_s").observe(t1 - t0)
+        cs = self.cache.stats()
+        probes = cs["hits"] + cs["misses"]
+        reg.gauge("lru_hit_rate").set(cs["hits"] / probes if probes else 0.0)
+        if tr is not None:
+            tr.add_span("serve/flush", t0, t1, n_requests=len(queue))
         return queue

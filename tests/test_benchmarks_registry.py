@@ -165,3 +165,19 @@ def test_committed_baseline_gates_dynamic_updates():
                 assert rows[key].get("checksum"), key
             assert ("dynamic_updates", f"{fam}/{kind}/pagerank") in rows
     assert ("dynamic_updates", "road/server_mutate") in rows
+
+
+def test_committed_baseline_gates_phase_trace():
+    """The ISSUE-7 tentpole bench: the baseline must pin every traced
+    family × strategy cell with a checksum (traced ≡ untraced results are
+    asserted in-bench, so the checksum gates both paths at once), plus
+    the per-family ordering rows and the span-artifact row."""
+    data = json.loads((BENCH_DIR / "baseline.json").read_text())
+    rows = {(r["bench"], r["case"]): r for r in data["rows"]}
+    for fam in ("road", "uniform", "rmat"):
+        for strat in ("row", "col", "2d"):
+            key = ("phase_trace", f"{fam}/{strat}")
+            assert key in rows, key
+            assert rows[key].get("checksum"), key
+        assert ("phase_trace", f"{fam}/ordering") in rows
+    assert ("phase_trace", "artifact") in rows

@@ -285,6 +285,56 @@ def test_lru_counters_and_stats_accessor(graph):
     assert st["cache"] == srv.cache.stats()
 
 
+def test_stats_returns_a_deep_copy(graph):
+    """The ISSUE-7 satellite regression: mutating any nesting level of a
+    stats() snapshot must never write through to the server's live
+    counters, cache stats, or latency instruments."""
+    srv = GraphQueryServer(graph, batch_size=4)
+    srv.submit("bfs", 1); srv.flush()
+    st = srv.stats()
+    st["served"] = 999
+    st["cache"]["hits"] = 999
+    st["latency"]["queue_depth"]["max"] = 999.0
+    st["latency"]["flush_s"]["count"] = 999
+    st["latency"]["lru_hit_rate"] = 999.0
+    fresh = srv.stats()
+    assert fresh["served"] == 1
+    assert fresh["cache"]["hits"] != 999
+    assert fresh["latency"]["queue_depth"]["max"] != 999.0
+    assert fresh["latency"]["flush_s"]["count"] == 1
+    assert fresh["latency"]["lru_hit_rate"] != 999.0
+    assert st is not fresh and st["cache"] is not fresh["cache"]
+
+
+def test_stats_latency_section(graph):
+    """stats()["latency"]: per-flush and per-query latency accounting
+    from the server's private MetricsRegistry (the ISSUE-7 tentpole's
+    serve-layer instrumentation)."""
+    srv = GraphQueryServer(graph, batch_size=4)
+    lat0 = srv.stats()["latency"]
+    assert lat0["queue_depth"]["writes"] == 0     # nothing flushed yet
+
+    for s in (1, 2, 3, 4, 5):
+        srv.submit("bfs", s)
+    srv.flush()
+    srv.submit("bfs", 1); srv.flush()             # a cache-hit flush
+    lat = srv.stats()["latency"]
+
+    assert lat["queue_depth"]["max"] == 5.0 and \
+        lat["queue_depth"]["writes"] == 2
+    assert lat["enqueue_wait_s"]["count"] == 6    # every request waited
+    assert lat["enqueue_wait_s"]["min"] >= 0.0
+    assert lat["flush_s"]["count"] == 2
+    assert lat["flush_s"]["p50"] <= lat["flush_s"]["max"]
+    # 5 deduped sources / batch_size 4 -> two padded batches, then none
+    assert lat["batch_size"]["count"] == 2
+    assert lat["batch_size"]["max"] == 4.0
+    assert lat["bucket_s"]["count"] == 2
+    assert lat["lru_hit_rate"] > 0.0              # the second flush hit
+    import json as _json
+    _json.dumps(srv.stats())                      # snapshot stays JSON-safe
+
+
 def _delta_for(graph):
     """A delta confined to the largest component, plus the sources whose
     cached answers must survive it (picked from other components)."""

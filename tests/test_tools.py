@@ -142,3 +142,75 @@ def test_compare_bench_check_timings():
     # and rows absent from the trajectory point are skipped
     assert len(regressions) == 1 and "b,d.wall_ms" in regressions[0]
     assert cb.compare_timings(cur, prev, threshold=2.0) == []
+
+
+def test_compare_bench_writes_github_step_summary(tmp_path, monkeypatch):
+    """--check-timings must mirror its warnings into $GITHUB_STEP_SUMMARY
+    as markdown (the ISSUE-7 CI satellite) — and stay a no-op without it."""
+    import json
+    cb = _load("compare_bench")
+    point = tmp_path / "BENCH_PR1.json"
+    point.write_text(json.dumps(
+        {"pr": 1, "reps": 1,
+         "rows": [{"bench": "b", "case": "c", "wall_ms": 1.0}]}))
+    cur = tmp_path / "cur.json"
+    cur.write_text(json.dumps([{"bench": "b", "case": "c", "wall_ms": 3.0}]))
+
+    monkeypatch.delenv("GITHUB_STEP_SUMMARY", raising=False)
+    assert cb.main([str(cur), "--check-timings",
+                    "--trajectory", str(point)]) == 2   # works without env
+
+    summary = tmp_path / "summary.md"
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(summary))
+    assert cb.main([str(cur), "--check-timings",
+                    "--trajectory", str(point)]) == 2
+    text = summary.read_text()
+    assert ":warning:" in text and "b,c.wall_ms" in text \
+        and "BENCH_PR1.json" in text
+
+    summary.unlink()
+    assert cb.main([str(cur), "--check-timings", "--trajectory", str(point),
+                    "--threshold", "9.0"]) == 0
+    assert "No timing regressions." in summary.read_text()
+
+
+def test_bench_trajectory_diff():
+    """diff: signed regression fractions on shared *_ms/*_per_s fields
+    (``_per_s`` down = regression), plus row-membership changes."""
+    bt = _load("bench_trajectory")
+    old = [{"bench": "b", "case": "c", "wall_ms": 10.0, "q_per_s": 100.0,
+            "checksum": "aa"},
+           {"bench": "b", "case": "gone", "wall_ms": 1.0}]
+    new = [{"bench": "b", "case": "c", "wall_ms": 12.0, "q_per_s": 80.0,
+            "checksum": "aa"},
+           {"bench": "b", "case": "fresh", "wall_ms": 2.0}]
+    deltas, only_old, only_new = bt.diff_rows(old, new)
+    by = {(k, f): ch for k, f, _, _, ch in deltas}
+    assert abs(by[(("b", "c"), "wall_ms")] - 0.2) < 1e-9
+    assert abs(by[(("b", "c"), "q_per_s")] - 0.2) < 1e-9  # throughput drop
+    assert only_old == [("b", "gone")] and only_new == [("b", "fresh")]
+    # checksum (string) and zero/non-numeric fields never produce deltas
+    assert all(f.endswith("_ms") or f.endswith("_per_s")
+               for _, f, _, _, _ in deltas)
+    lines = bt.format_diff(deltas, only_old, only_new)
+    assert any("SLOWER" in line and "wall_ms" in line for line in lines)
+    assert any(line.startswith("  removed b,gone") for line in lines)
+    # a threshold hides small movements
+    small = bt.diff_rows([{"bench": "b", "case": "c", "wall_ms": 100.0}],
+                         [{"bench": "b", "case": "c", "wall_ms": 101.0}])[0]
+    assert bt.format_diff(small, [], [], threshold=0.05) == []
+
+
+def test_bench_trajectory_diff_cli(tmp_path, capsys):
+    import json
+    bt = _load("bench_trajectory")
+    (tmp_path / "a.json").write_text(json.dumps(
+        {"pr": 1, "reps": 1,
+         "rows": [{"bench": "b", "case": "c", "wall_ms": 1.0}]}))
+    # raw benchmarks.run dumps (bare row lists) are accepted too
+    (tmp_path / "b.json").write_text(json.dumps(
+        [{"bench": "b", "case": "c", "wall_ms": 2.0}]))
+    assert bt.main(["diff", str(tmp_path / "a.json"),
+                    str(tmp_path / "b.json")]) == 0
+    out = capsys.readouterr().out
+    assert "1 shared row(s)" in out and "+100.0%" in out

@@ -4,6 +4,7 @@ series ROADMAP's "timing-aware perf trajectory" item calls for.
     python tools/bench_trajectory.py add --pr 6 rep1.json rep2.json ...
     python tools/bench_trajectory.py validate
     python tools/bench_trajectory.py latest [--before 6]
+    python tools/bench_trajectory.py diff BENCH_PR6.json BENCH_PR7.json
 
 ``add`` folds N repetitions of a ``benchmarks.run --json`` dump into one
 trajectory point: every ``*_ms`` metric keeps the **min over reps** (each
@@ -21,6 +22,11 @@ agreement, schema, non-empty unique row keys.  ``latest`` prints the path
 of the newest point (optionally the newest strictly before ``--before``,
 which is what CI uses to diff a PR against its predecessor via
 ``tools/compare_bench.py --check-timings``).
+
+``diff`` prints per-row timing deltas between two points: every ``*_ms``
+and ``*_per_s`` field both points share, largest regression first, with
+rows present in only one point listed at the end.  ``--threshold 0.05``
+hides fields that moved less than 5% in either direction.
 """
 from __future__ import annotations
 
@@ -64,6 +70,59 @@ def fold_reps(reps: list[list[dict]]) -> list[dict]:
                         f"{folded.get(field)!r} vs {value!r} (result "
                         f"drift between reps, not timing noise)")
     return [base[k] for k in sorted(base)]
+
+
+def load_rows(path: pathlib.Path) -> list[dict]:
+    """Rows from either a trajectory point ({"rows": [...]}) or a raw
+    ``benchmarks.run --json`` dump ([...])."""
+    data = json.loads(path.read_text())
+    return data.get("rows", data) if isinstance(data, dict) else data
+
+
+def diff_rows(old_rows: list[dict], new_rows: list[dict]):
+    """Timing deltas between two row sets.
+
+    Returns ``(deltas, only_old, only_new)`` where each delta is
+    ``(key, field, old, new, change)`` and ``change`` is the signed
+    fractional *regression* (positive = slower: ``_ms`` went up or
+    ``_per_s`` went down), sorted largest regression first.
+    """
+    old = {row_key(r): r for r in old_rows}
+    new = {row_key(r): r for r in new_rows}
+    deltas = []
+    for key in sorted(set(old) & set(new)):
+        for field, va in old[key].items():
+            if not (field.endswith("_ms") or field.endswith("_per_s")):
+                continue
+            vb = new[key].get(field)
+            if not (isinstance(va, (int, float)) and
+                    isinstance(vb, (int, float))) \
+                    or isinstance(va, bool) or isinstance(vb, bool) \
+                    or va <= 0:
+                continue
+            change = (vb - va) / va
+            if field.endswith("_per_s"):
+                change = -change
+            deltas.append((key, field, float(va), float(vb), change))
+    deltas.sort(key=lambda d: -d[4])
+    return deltas, sorted(set(old) - set(new)), sorted(set(new) - set(old))
+
+
+def format_diff(deltas, only_old, only_new, threshold: float = 0.0
+                ) -> list[str]:
+    lines = []
+    for key, field, va, vb, change in deltas:
+        if abs(change) < threshold:
+            continue
+        unit = "ms" if field.endswith("_ms") else "/s"
+        tag = "SLOWER" if change > 0 else "faster"
+        lines.append(f"  {tag} {key[0]},{key[1]}.{field}: "
+                     f"{va:.3f} -> {vb:.3f} {unit} ({change:+.1%})")
+    for key in only_old:
+        lines.append(f"  removed {key[0]},{key[1]}")
+    for key in only_new:
+        lines.append(f"  added   {key[0]},{key[1]}")
+    return lines
 
 
 def series(root: pathlib.Path = REPO_ROOT) -> list[tuple[int, pathlib.Path]]:
@@ -116,6 +175,12 @@ def main(argv: list[str] | None = None) -> int:
     p_lat.add_argument("--root", default=str(REPO_ROOT))
     p_lat.add_argument("--before", type=int, default=None,
                        help="newest point with pr strictly below this")
+    p_diff = sub.add_parser("diff")
+    p_diff.add_argument("old", help="older trajectory point (or raw dump)")
+    p_diff.add_argument("new", help="newer trajectory point (or raw dump)")
+    p_diff.add_argument("--threshold", type=float, default=0.0,
+                        help="hide fields that moved less than this "
+                             "fraction (e.g. 0.05 = 5%%)")
     args = ap.parse_args(argv)
 
     if args.cmd == "add":
@@ -128,6 +193,19 @@ def main(argv: list[str] | None = None) -> int:
             indent=2, default=float) + "\n")
         print(f"bench_trajectory: wrote {len(rows)} rows "
               f"(min of {len(reps)} reps) to {out}")
+        return 0
+
+    if args.cmd == "diff":
+        old_p, new_p = pathlib.Path(args.old), pathlib.Path(args.new)
+        deltas, only_old, only_new = diff_rows(load_rows(old_p),
+                                               load_rows(new_p))
+        shared = {d[0] for d in deltas}
+        print(f"bench_trajectory: diff {old_p.name} -> {new_p.name} "
+              f"({len(shared)} shared row(s), {len(deltas)} timing "
+              f"field(s))")
+        for line in format_diff(deltas, only_old, only_new,
+                                threshold=args.threshold):
+            print(line)
         return 0
 
     root = pathlib.Path(args.root)

@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
 import sys
 
@@ -99,6 +100,25 @@ def compare_timings(current: list[dict], trajectory: list[dict],
     return regressions
 
 
+def write_step_summary(regressions: list[str], trajectory: str,
+                       threshold: float) -> bool:
+    """Append the --check-timings verdict to ``$GITHUB_STEP_SUMMARY`` as
+    markdown so the non-blocking CI warning is visible without opening
+    the step log.  No-op (returns False) outside GitHub Actions."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return False
+    lines = [f"### Timing drift vs `{pathlib.Path(trajectory).name}` "
+             f"(threshold {threshold:g}x, non-blocking)", ""]
+    if regressions:
+        lines += [f"- :warning: `{r}`" for r in regressions]
+    else:
+        lines.append("No timing regressions.")
+    with open(path, "a") as fh:
+        fh.write("\n".join(lines) + "\n\n")
+    return True
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("current", help="benchmarks.run --json output to check")
@@ -130,6 +150,7 @@ def main(argv: list[str] | None = None) -> int:
         print(f"compare_bench: timings vs {args.trajectory} "
               f"(threshold {args.threshold}x): "
               f"{len(regressions)} regression(s)")
+        write_step_summary(regressions, args.trajectory, args.threshold)
         return 2 if regressions else 0
 
     if args.update_baseline:
