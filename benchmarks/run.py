@@ -30,6 +30,7 @@ MODULES = [
     "pipeline_overlap",
     "table4_apps",
     "multi_query",
+    "serving_load",
     "analytics",
     "sensitivity_switch",
     "roofline",

@@ -1,0 +1,195 @@
+"""Serving-load benchmark: closed-loop latency/throughput for the async
+event-loop server (serve/scheduler.py + serve/graph_engine.py).
+
+Three probes, one row family each:
+
+* **closed loop** — N client threads over two tenants, each running
+  submit → wait → next with seeded per-client algorithm/source streams
+  (bfs / sssp / ppr mixes).  Rows report exact p50/p99 latency
+  (obs.metrics.percentile_exact over the clients' wall measurements,
+  not the histogram estimate) and sustained qps per client count; the
+  ``saturation`` row carries the best qps across the sweep.  Wall
+  numbers are artifact data only (2-core CI runners) — nothing asserts
+  on them.
+
+* **backpressure** — a deliberately saturated admission queue (window
+  never self-flushes on a fake clock): every over-bound submit must
+  raise the typed BackpressureError, the rejections must be counted in
+  the tenant's ``stats()["latency"]``, and the queue depth high-water
+  must respect the bound.  All asserted; the row records the counts.
+
+* **oracle checksums** — a fixed query set replayed through the async
+  server and the synchronous GraphQueryServer; payloads are asserted
+  element-exact equal and the integer-exact answers (bfs levels, sssp
+  distances over content-keyed integer weights, cc labels) emit
+  ``checksum`` rows that gate in CI via tools/compare_bench.py against
+  benchmarks/baseline.json.  Identical in quick and full mode, so the
+  quick-mode baseline always covers them.
+"""
+from benchmarks import common  # noqa: F401  (must be first: device count)
+
+import hashlib
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.graphs import generate
+from repro.obs.metrics import percentile_exact
+from repro.serve.graph_engine import AsyncGraphServer, GraphQueryServer
+from repro.serve.scheduler import BackpressureError, FakeClock
+
+ALGS = ("bfs", "sssp", "ppr")
+
+
+def _csum(arr: np.ndarray) -> str:
+    a = np.asarray(arr, np.float64)
+    ints = np.where(np.isfinite(a), a, -1.0).astype(np.int64)
+    return hashlib.sha1(ints.tobytes()).hexdigest()[:12]
+
+
+def _graphs():
+    return {"hot": generate("face", scale=0.12, seed=3),
+            "cold": generate("face", scale=0.12, seed=9)}
+
+
+# ------------------------------------------------------------- closed loop
+def _closed_loop(n_clients: int, per_client: int, graphs) -> dict:
+    """One sweep point: N closed-loop clients, wall-clock measured
+    client-side (admission wait + queueing + batch + resolve)."""
+    latencies: list = []
+    rejections = [0]
+    lock = threading.Lock()
+    srv = AsyncGraphServer(max_pending=64, max_wait=0.002)
+    for name, g in graphs.items():
+        srv.add_tenant(name, g, batch_size=8)
+    tenants = sorted(graphs)
+
+    def client(cid: int):
+        rng = np.random.default_rng(7000 + cid)
+        tenant = tenants[cid % len(tenants)]
+        n = graphs[tenant].n
+        mine = []
+        for _ in range(per_client):
+            alg = ALGS[int(rng.integers(0, len(ALGS)))]
+            src = int(rng.integers(0, n))
+            t0 = time.perf_counter()
+            while True:
+                try:
+                    tk = srv.submit(tenant, alg, src,
+                                    deadline=float(rng.uniform(0.002, 0.02)))
+                    break
+                except BackpressureError:
+                    with lock:
+                        rejections[0] += 1
+                    time.sleep(0.0005)      # closed-loop backoff
+            tk.wait(timeout=300)
+            mine.append(time.perf_counter() - t0)
+        with lock:
+            latencies.extend(mine)
+
+    with srv:
+        # compile warmup outside the measured window: one query per
+        # algorithm per tenant primes every jitted runner
+        warm = [srv.submit(t, a, 0) for t in tenants for a in ALGS]
+        for tk in warm:
+            tk.wait(timeout=300)
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(n_clients)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+
+    served = n_clients * per_client
+    assert len(latencies) == served          # no response lost
+    st = srv.stats(tenants[0])["scheduler"]
+    assert st["pending"] == 0 and st["depth_high_water"] <= st["max_pending"]
+    return {"queries_per_s": served / wall,
+            "p50_ms": percentile_exact(latencies, 0.50) * 1e3,
+            "p99_ms": percentile_exact(latencies, 0.99) * 1e3,
+            "served": served, "rejections": rejections[0]}
+
+
+# ------------------------------------------------------------ backpressure
+def _backpressure_probe():
+    """Saturate admission on a fake clock (the window can never
+    self-flush) and assert the shedding contract end to end."""
+    g = generate("face", scale=0.1, seed=3)
+    srv = AsyncGraphServer(clock=FakeClock(), max_pending=32, max_wait=10.0)
+    srv.add_tenant("t", g, batch_size=64)
+    rejected = 0
+    for i in range(40):
+        try:
+            srv.submit("t", "bfs", i % g.n)
+        except BackpressureError as e:
+            rejected += 1
+            assert (e.tenant, e.depth, e.max_pending) == ("t", 32, 32)
+    st = srv.stats("t")
+    sched = st["scheduler"]
+    assert rejected == 8, rejected
+    assert st["latency"]["rejected"] == 8            # observable per tenant
+    assert sched["rejected"] == 8 and sched["admitted"] == 32
+    assert sched["depth_high_water"] <= sched["max_pending"] == 32
+    assert srv.drain() == 32                          # admitted work survives
+    emit("serving_load", "backpressure", admitted=sched["admitted"],
+         rejected=rejected, depth_high_water=sched["depth_high_water"],
+         max_pending=sched["max_pending"])
+
+
+# -------------------------------------------------------- oracle checksums
+def _oracle_checksums():
+    """Async answers == sync answers, element-exact; integer payloads
+    emit CI-gated checksums. Mode-independent (no quick/full split)."""
+    g = generate("face", scale=0.15, seed=3)
+    asrv = AsyncGraphServer(clock=FakeClock(), max_pending=1024,
+                            max_wait=0.01)
+    asrv.add_tenant("t", g, batch_size=8)
+    ssrv = GraphQueryServer(g, batch_size=8)
+    rng = np.random.default_rng(0)
+    srcs = sorted({int(s) for s in rng.integers(0, g.n, 8)})
+
+    for alg, field in (("bfs", "levels"), ("sssp", "dist")):
+        tks = [asrv.submit("t", alg, s) for s in srcs]
+        reqs = [ssrv.submit(alg, s) for s in srcs]
+        asrv.drain()
+        ssrv.flush()
+        got = np.stack([tk.result[field] for tk in tks])
+        ref = np.stack([r.result[field] for r in reqs])
+        np.testing.assert_array_equal(got, ref,
+                                      err_msg=f"async != sync for {alg}")
+        emit("serving_load", f"oracle/{alg}", n_sources=len(srcs),
+             checksum=_csum(got))
+
+    tk, rq = asrv.submit("t", "cc"), ssrv.submit("cc")
+    asrv.drain()
+    ssrv.flush()
+    np.testing.assert_array_equal(tk.result["labels"], rq.result["labels"])
+    assert tk.result["n_components"] == rq.result["n_components"]
+    emit("serving_load", "oracle/cc",
+         n_components=tk.result["n_components"],
+         checksum=_csum(tk.result["labels"]))
+
+
+def run(quick: bool = False):
+    graphs = _graphs()
+    sweep = [2, 8] if quick else [1, 4, 16]
+    per_client = 20 if quick else 40
+    best = 0.0
+    for n_clients in sweep:
+        m = _closed_loop(n_clients, per_client, graphs)
+        best = max(best, m["queries_per_s"])
+        emit("serving_load", f"clients{n_clients}", **m)
+    emit("serving_load", "saturation", queries_per_s=best)
+    _backpressure_probe()
+    _oracle_checksums()
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(quick=ap.parse_args().quick)

@@ -21,6 +21,7 @@ the serving layer's phase overlap (see serve.graph_engine).
 """
 from __future__ import annotations
 
+import threading
 from typing import Callable, NamedTuple
 
 import jax
@@ -275,16 +276,23 @@ def make_ppr_multi(engine: GraphEngine, batch: int, alpha: float = 0.85,
 _MAKERS = {"bfs": make_bfs_multi, "sssp": make_sssp_multi,
            "ppr": make_ppr_multi, "relax": make_relax_multi}
 
+# Builds are serialized under one module lock: the async serving layer
+# may drain two servers sharing an engine from different threads, and a
+# racing double-build would waste a compile (results would still agree).
+_runner_lock = threading.Lock()
+
 
 def _cached_runner(engine: GraphEngine, alg: str, batch: int, mesh,
                    axis_name: str, **kwargs):
     """One jitted runner per (engine, alg, batch, options) — GraphEngine is
     an unhashable dataclass, so runners live in its instance __dict__."""
-    cache = engine.__dict__.setdefault("_multi_runners", {})
     key = (alg, batch, id(mesh), axis_name, tuple(sorted(kwargs.items())))
+    cache = engine.__dict__.setdefault("_multi_runners", {})
     if key not in cache:
-        cache[key] = _MAKERS[alg](engine, batch, mesh=mesh,
-                                  axis_name=axis_name, **kwargs)
+        with _runner_lock:
+            if key not in cache:      # double-checked: lost races reuse
+                cache[key] = _MAKERS[alg](engine, batch, mesh=mesh,
+                                          axis_name=axis_name, **kwargs)
     return cache[key]
 
 

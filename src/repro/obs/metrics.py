@@ -13,8 +13,11 @@ The serving layer's latency accounting lives here.  A
   (default 2^(1/4) ≈ 19% relative error per bucket edge) starting from
   ``least`` (default 1 µs when observing seconds).
 
-Everything is thread-safe (one lock per registry) because the server may
-be flushed from multiple threads.  ``snapshot()`` renders the whole
+Everything is thread-safe: the registry locks its instrument maps, and
+every instrument carries its own lock so concurrent ``inc``/``set``/
+``observe`` calls (the async serving layer counts rejections from
+submitting threads while the event loop records flush latencies) never
+lose updates or tear a ``summary()``.  ``snapshot()`` renders the whole
 registry as plain dicts of floats/ints — JSON-serializable, safe to hand
 to callers (no live references escape).
 
@@ -30,23 +33,26 @@ from typing import Any, Dict, List, Optional
 
 
 class Counter:
-    """A monotonically increasing integer total."""
+    """A monotonically increasing integer total (thread-safe)."""
 
-    __slots__ = ("name", "value")
+    __slots__ = ("name", "value", "_lock")
 
     def __init__(self, name: str):
         self.name = name
         self.value = 0
+        self._lock = threading.Lock()
 
     def inc(self, amount: int = 1) -> int:
-        self.value += amount
-        return self.value
+        with self._lock:
+            self.value += amount
+            return self.value
 
 
 class Gauge:
-    """A last-written value (plus min/max watermarks since creation)."""
+    """A last-written value (plus min/max watermarks since creation);
+    thread-safe, so watermarks never miss a concurrent write."""
 
-    __slots__ = ("name", "value", "lo", "hi", "writes")
+    __slots__ = ("name", "value", "lo", "hi", "writes", "_lock")
 
     def __init__(self, name: str):
         self.name = name
@@ -54,12 +60,14 @@ class Gauge:
         self.lo = math.inf
         self.hi = -math.inf
         self.writes = 0
+        self._lock = threading.Lock()
 
     def set(self, value: float) -> float:
-        self.value = value
-        self.lo = min(self.lo, value)
-        self.hi = max(self.hi, value)
-        self.writes += 1
+        with self._lock:
+            self.value = value
+            self.lo = min(self.lo, value)
+            self.hi = max(self.hi, value)
+            self.writes += 1
         return value
 
 
@@ -77,7 +85,7 @@ class Histogram:
     """
 
     __slots__ = ("name", "least", "growth", "_log_g", "buckets",
-                 "count", "total", "lo", "hi")
+                 "count", "total", "lo", "hi", "_lock")
 
     def __init__(self, name: str, least: float = 1e-6,
                  growth: float = 2 ** 0.25):
@@ -92,24 +100,27 @@ class Histogram:
         self.total = 0.0
         self.lo = math.inf
         self.hi = -math.inf
+        self._lock = threading.Lock()
 
     def observe(self, value: float) -> None:
         if value <= self.least:
             idx = 0
         else:
             idx = 1 + int(math.log(value / self.least) / self._log_g)
-        self.buckets[idx] = self.buckets.get(idx, 0) + 1
-        self.count += 1
-        self.total += value
-        self.lo = min(self.lo, value)
-        self.hi = max(self.hi, value)
+        with self._lock:
+            self.buckets[idx] = self.buckets.get(idx, 0) + 1
+            self.count += 1
+            self.total += value
+            self.lo = min(self.lo, value)
+            self.hi = max(self.hi, value)
 
     @property
     def mean(self) -> float:
         return self.total / self.count if self.count else 0.0
 
-    def quantile(self, q: float) -> float:
-        """The estimated q-quantile (q in [0, 1])."""
+    def _quantile(self, q: float) -> float:
+        """q-quantile estimate; caller holds the lock (or owns the
+        instrument exclusively)."""
         if self.count == 0:
             return 0.0
         # Rank of the target observation, 1-based; q=1 → the last one.
@@ -126,18 +137,24 @@ class Histogram:
                 return min(max(mid, self.lo), self.hi)
         return self.hi  # unreachable
 
+    def quantile(self, q: float) -> float:
+        """The estimated q-quantile (q in [0, 1])."""
+        with self._lock:
+            return self._quantile(q)
+
     def summary(self) -> Dict[str, float]:
-        if self.count == 0:
-            return {"count": 0}
-        return {
-            "count": self.count,
-            "mean": self.mean,
-            "min": self.lo,
-            "max": self.hi,
-            "p50": self.quantile(0.50),
-            "p90": self.quantile(0.90),
-            "p99": self.quantile(0.99),
-        }
+        with self._lock:
+            if self.count == 0:
+                return {"count": 0}
+            return {
+                "count": self.count,
+                "mean": self.mean,
+                "min": self.lo,
+                "max": self.hi,
+                "p50": self._quantile(0.50),
+                "p90": self._quantile(0.90),
+                "p99": self._quantile(0.99),
+            }
 
 
 class MetricsRegistry:

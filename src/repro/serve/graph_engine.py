@@ -55,11 +55,21 @@ Serving-side optimizations:
 
 A ``mesh`` row-shards each [B, n] traversal block over devices (queries are
 independent), which is how one server saturates an 8-device host.
+
+:class:`AsyncGraphServer` is the event-loop front-end over all of the
+above: several tenants (graphs) in one process behind a shared LRU
+memory budget, with time-/size-window adaptive batch formation,
+admission control + typed backpressure, per-query deadlines/priorities
+(EDF within a window), and mutation interleaving — scheduling policy in
+:mod:`repro.serve.scheduler`, driven by an injectable clock so tests run
+deterministically (tests/test_async_server.py replays identical
+workloads through both servers and requires element-exact equality).
 """
 from __future__ import annotations
 
 import copy
 import dataclasses
+import threading
 import time
 from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Tuple
@@ -82,6 +92,9 @@ from repro.graphs.multi import traverse_multi_buckets
 from repro.graphs.ppr import pagerank
 from repro.obs import trace
 from repro.obs.metrics import MetricsRegistry
+from repro.serve.scheduler import (
+    BackpressureError, QueryTicket, SystemClock, WindowScheduler,
+)
 
 ALGORITHMS = ("bfs", "sssp", "ppr")
 GLOBAL_ALGORITHMS = ("pagerank", "cc", "triangles", "kcore")
@@ -114,37 +127,49 @@ class GraphRequest:
 class LRUCache:
     """Bounded (engine_key, algorithm, source) -> result-dict map, LRU
     eviction. The engine_key component makes the cache safe to share
-    across servers / graphs / rebuilt engines. Counts hits / misses /
-    capacity evictions (``stats()``) so the serving layer can *prove*
-    cache behaviour — e.g. that a mutate() preserved entries — instead of
-    asserting it."""
+    across servers / graphs / rebuilt engines. Counts lookups / hits /
+    misses / capacity evictions (``stats()``) so the serving layer can
+    *prove* cache behaviour — e.g. that a mutate() preserved entries —
+    instead of asserting it.
+
+    Thread-safe: one lock guards the map and every counter, so a cache
+    shared by several tenants of an :class:`AsyncGraphServer` (the
+    multi-tenant memory budget) stays consistent under concurrent
+    flushes — ``hits + misses == lookups`` holds in every ``stats()``
+    snapshot, never just at quiescence."""
 
     def __init__(self, capacity: int):
         self.capacity = capacity
         self._d: OrderedDict[Tuple[str, str, int], Dict[str, Any]] = OrderedDict()
+        self._lock = threading.Lock()
+        self.lookups = 0
         self.hits = 0
         self.misses = 0
         self.evictions = 0
 
     def __len__(self) -> int:
-        return len(self._d)
+        with self._lock:
+            return len(self._d)
 
     def get(self, key: Tuple[str, str, int]) -> Optional[Dict[str, Any]]:
-        if key in self._d:
-            self._d.move_to_end(key)
-            self.hits += 1
-            return self._d[key]
-        self.misses += 1
-        return None
+        with self._lock:
+            self.lookups += 1
+            if key in self._d:
+                self._d.move_to_end(key)
+                self.hits += 1
+                return self._d[key]
+            self.misses += 1
+            return None
 
     def put(self, key: Tuple[str, str, int], value: Dict[str, Any]) -> None:
         if self.capacity <= 0:
             return
-        self._d[key] = value
-        self._d.move_to_end(key)
-        while len(self._d) > self.capacity:
-            self._d.popitem(last=False)
-            self.evictions += 1
+        with self._lock:
+            self._d[key] = value
+            self._d.move_to_end(key)
+            while len(self._d) > self.capacity:
+                self._d.popitem(last=False)
+                self.evictions += 1
 
     def migrate(self, old_prefix: str, new_prefix: str,
                 keep) -> Tuple[int, int]:
@@ -155,22 +180,25 @@ class LRUCache:
         prefixes (a shared cache serving other graphs) are untouched.
         Returns (retained, invalidated)."""
         retained = invalidated = 0
-        moved: OrderedDict[Tuple[str, str, int], Dict[str, Any]] = OrderedDict()
-        for key, value in self._d.items():
-            if key[0] != old_prefix:
-                moved[key] = value
-            elif keep(key[1], key[2], value):
-                moved[(new_prefix,) + key[1:]] = value
-                retained += 1
-            else:
-                invalidated += 1
-        self._d = moved
+        with self._lock:
+            moved: OrderedDict[Tuple[str, str, int], Dict[str, Any]] = \
+                OrderedDict()
+            for key, value in self._d.items():
+                if key[0] != old_prefix:
+                    moved[key] = value
+                elif keep(key[1], key[2], value):
+                    moved[(new_prefix,) + key[1:]] = value
+                    retained += 1
+                else:
+                    invalidated += 1
+            self._d = moved
         return retained, invalidated
 
     def stats(self) -> Dict[str, int]:
-        return {"hits": self.hits, "misses": self.misses,
-                "evictions": self.evictions, "size": len(self._d),
-                "capacity": self.capacity}
+        with self._lock:
+            return {"lookups": self.lookups, "hits": self.hits,
+                    "misses": self.misses, "evictions": self.evictions,
+                    "size": len(self._d), "capacity": self.capacity}
 
 
 class GraphQueryServer:
@@ -259,6 +287,9 @@ class GraphQueryServer:
         snap = self.metrics.snapshot()
         probes = cs["hits"] + cs["misses"]
         latency: Dict[str, Any] = dict(snap["histograms"])
+        # registry counters ride along (the async layer counts typed
+        # backpressure rejections here, per tenant)
+        latency.update(snap["counters"])
         latency["queue_depth"] = snap["gauges"].get(
             "queue_depth", {"value": 0.0, "min": 0.0, "max": 0.0,
                             "writes": 0})
@@ -428,24 +459,33 @@ class GraphQueryServer:
                       replanned=replanned)
         return report
 
-    def submit(self, algorithm: str, source: int | None = None) -> GraphRequest:
-        """Enqueue one query; resolution happens at the next flush().
-        Traversal kinds require a source vertex; global kinds take none."""
+    def validate_request(self, algorithm: str,
+                         source: int | None = None) -> Tuple[str, int]:
+        """Validate one (algorithm, source) pair -> the normalized
+        ``(algorithm, source)`` with global kinds mapped to the GLOBAL
+        sentinel. Raises ValueError on anything unservable — shared by
+        the synchronous submit() and the async admission path (so a bad
+        query is rejected at submit time, never inside a flush)."""
         if algorithm in GLOBAL_ALGORITHMS:
             if source is not None:
                 raise ValueError(f"{algorithm!r} is a whole-graph query; "
                                  f"it takes no source")
-            req = GraphRequest(algorithm, GLOBAL)
-        elif algorithm in ALGORITHMS:
+            return algorithm, GLOBAL
+        if algorithm in ALGORITHMS:
             if source is None:
                 raise ValueError(f"{algorithm!r} requires a source vertex")
             if not 0 <= source < self.graph.n:
                 raise ValueError(
                     f"source {source} out of range [0, {self.graph.n})")
-            req = GraphRequest(algorithm, int(source))
-        else:
-            raise ValueError(f"unknown algorithm {algorithm!r}; expected one "
-                             f"of {ALGORITHMS + GLOBAL_ALGORITHMS}")
+            return algorithm, int(source)
+        raise ValueError(f"unknown algorithm {algorithm!r}; expected one "
+                         f"of {ALGORITHMS + GLOBAL_ALGORITHMS}")
+
+    def submit(self, algorithm: str, source: int | None = None) -> GraphRequest:
+        """Enqueue one query; resolution happens at the next flush().
+        Traversal kinds require a source vertex; global kinds take none."""
+        algorithm, src = self.validate_request(algorithm, source)
+        req = GraphRequest(algorithm, src)
         req.submitted_at = time.perf_counter()
         self._queue.append(req)
         self.counters["submitted"] += 1
@@ -583,21 +623,34 @@ class GraphQueryServer:
         are recorded into the metrics registry (stats()["latency"]); with
         a tracer installed each query additionally gets a retrospective
         ``serve/enqueue_wait`` span (submit stamp → flush start) and the
-        flush itself a ``serve/flush`` span."""
-        t0 = time.perf_counter()
+        flush itself a ``serve/flush`` span.
+
+        Edge semantics (pinned in tests/test_async_server.py): flushing
+        an **empty** queue is a free no-op — ``[]``, no engine work, no
+        metrics observations (an idle event-loop tick must not skew the
+        latency histograms).  A queued request that is **already
+        resolved** (a ticket flushed twice) passes through untouched:
+        its cached payload is returned as-is, nothing recomputes, and no
+        counter moves for it."""
         queue, self._queue = self._queue, []
+        if not queue:
+            return []
+        pending = [req for req in queue if req.result is None]
+        if not pending:
+            return queue       # every ticket already resolved: no-op
+        t0 = time.perf_counter()
         tr = trace.active()
         reg = self.metrics
         reg.gauge("queue_depth").set(float(len(queue)))
         wait_h = reg.histogram("enqueue_wait_s")
-        for req in queue:
+        for req in pending:
             if req.submitted_at:
                 wait_h.observe(t0 - req.submitted_at)
                 if tr is not None:
                     tr.add_span("serve/enqueue_wait", req.submitted_at, t0,
                                 algorithm=req.algorithm, source=req.source)
         by_alg: Dict[str, List[GraphRequest]] = {}
-        for req in queue:
+        for req in pending:
             by_alg.setdefault(req.algorithm, []).append(req)
 
         for algorithm, reqs in by_alg.items():
@@ -651,12 +704,190 @@ class GraphQueryServer:
                 if req.result is None:
                     req.result = dict(fresh[req.source])
 
-        self.counters["served"] += len(queue)
+        self.counters["served"] += len(pending)
         t1 = time.perf_counter()
         reg.histogram("flush_s").observe(t1 - t0)
         cs = self.cache.stats()
         probes = cs["hits"] + cs["misses"]
         reg.gauge("lru_hit_rate").set(cs["hits"] / probes if probes else 0.0)
         if tr is not None:
-            tr.add_span("serve/flush", t0, t1, n_requests=len(queue))
+            tr.add_span("serve/flush", t0, t1, n_requests=len(pending))
         return queue
+
+
+class AsyncGraphServer:
+    """Event-loop serving front-end: many graphs ("tenants") in one
+    process, queries admitted asynchronously and drained by a scheduler
+    instead of explicit caller flushes.
+
+    Each tenant is a full :class:`GraphQueryServer` (lazy engines,
+    dedup, pipelined flush drain, live ``mutate()``), all sharing **one**
+    :class:`LRUCache` — the multi-tenant memory budget: entries carry
+    per-tenant engine fingerprints, so tenants compete for capacity but
+    can never read each other's answers.  Scheduling policy
+    (time-/size-window batch formation, EDF ordering, admission control
+    with typed backpressure) lives in
+    :class:`repro.serve.scheduler.WindowScheduler`; this class binds it
+    to the engines:
+
+    * ``submit()`` validates eagerly (a bad query raises here, never
+      inside the loop), admits a :class:`QueryTicket` or raises the
+      typed :class:`BackpressureError` — counted per tenant in
+      ``stats(tenant)["latency"]["rejected"]``.
+    * the executor drains one tenant's window through its synchronous
+      server under a per-tenant lock (engines are not reentrant), so
+      flushes of *different* tenants interleave freely with each other
+      and with mutations.
+    * ``mutate()`` drains the tenant's pending window first — exactly
+      the synchronous server's queued-requests-see-the-old-snapshot
+      contract, lifted to the async queue.
+
+    Run it threaded (``start()``/``close()``, real clock) for serving
+    and benchmarks, or single-threaded on a
+    :class:`~repro.serve.scheduler.FakeClock` (``submit → advance →
+    poll``) for deterministic tests — the differential suite
+    (tests/test_async_server.py) replays identical workloads through
+    both this and the synchronous server and requires element-exact
+    payload equality.
+    """
+
+    def __init__(self, clock=None, max_pending: int = 256,
+                 max_wait: float = 0.05, cache_capacity: int = 4096,
+                 cache: LRUCache | None = None):
+        self.clock = clock if clock is not None else SystemClock()
+        self.cache = cache if cache is not None else LRUCache(cache_capacity)
+        self.scheduler = WindowScheduler(
+            self._drain_tenant, clock=self.clock, max_pending=max_pending,
+            default_max_wait=max_wait)
+        self._tenants: Dict[str, GraphQueryServer] = {}
+        self._tenant_locks: Dict[str, threading.Lock] = {}
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    # ------------------------------------------------------------ tenants
+    def add_tenant(self, name: str, graph: Graph,
+                   max_wait: float | None = None,
+                   **server_kwargs) -> GraphQueryServer:
+        """Host ``graph`` under ``name``: builds its GraphQueryServer on
+        the shared LRU (pass ``cache=`` to override) and registers its
+        window with the scheduler. ``server_kwargs`` are the synchronous
+        server's knobs (batch_size, pipeline_depth, strategy, ...);
+        ``max_wait`` overrides the server-wide latency budget."""
+        if name in self._tenants:
+            raise ValueError(f"tenant {name!r} already exists")
+        server_kwargs.setdefault("cache", self.cache)
+        server = GraphQueryServer(graph, **server_kwargs)
+        self.scheduler.register(name, batch_size=server.batch_size,
+                                max_wait=max_wait)
+        self._tenants[name] = server
+        self._tenant_locks[name] = threading.Lock()
+        return server
+
+    def tenant(self, name: str) -> GraphQueryServer:
+        if name not in self._tenants:
+            raise ValueError(f"unknown tenant {name!r}; "
+                             f"hosted: {sorted(self._tenants)}")
+        return self._tenants[name]
+
+    # ------------------------------------------------------------- submit
+    def submit(self, tenant: str, algorithm: str, source: int | None = None,
+               deadline: float | None = None,
+               priority: int = 0) -> QueryTicket:
+        """Admit one query for ``tenant`` and return its ticket.
+
+        ``deadline`` is a relative latency budget in seconds — it pulls
+        the window flush earlier and orders dispatch (EDF); it never
+        drops admitted work.  ``priority`` breaks deadline ties (higher
+        first).  Raises ValueError on an unservable query and
+        :class:`BackpressureError` when the queue is saturated (counted
+        in ``stats(tenant)["latency"]["rejected"]``)."""
+        server = self.tenant(tenant)
+        algorithm, src = server.validate_request(algorithm, source)
+        abs_deadline = (None if deadline is None
+                        else self.clock.now() + deadline)
+        ticket = QueryTicket(tenant, algorithm, src, priority=priority,
+                             deadline=abs_deadline)
+        try:
+            self.scheduler.submit(ticket)
+        except BackpressureError:
+            server.metrics.counter("rejected").inc()
+            raise
+        return ticket
+
+    # ----------------------------------------------------------- executor
+    def _drain_tenant(self, name: str, tickets: List[QueryTicket]) -> None:
+        """Scheduler executor: resolve one tenant window (already in EDF
+        order) through its synchronous server. The per-tenant lock keeps
+        the non-reentrant engine safe while other tenants' windows — and
+        other tenants' mutations — proceed concurrently."""
+        server = self._tenants[name]
+        with self._tenant_locks[name]:
+            reg = server.metrics
+            now = self.clock.now()
+            wait_h = reg.histogram("time_in_queue_s")
+            occ_h = reg.histogram("window_occupancy", least=1e-3)
+            occ_h.observe(len(tickets) / server.batch_size)
+            reqs = []
+            for tk in tickets:
+                wait_h.observe(max(0.0, now - tk.admitted_at))
+                reqs.append(server.submit(
+                    tk.algorithm,
+                    None if tk.source == GLOBAL else tk.source))
+            server.flush()
+            for tk, req in zip(tickets, reqs):
+                tk.resolve(req.result, cached=req.cached)
+
+    # --------------------------------------------------------- scheduling
+    def poll(self) -> int:
+        """Flush every due window now (the fake-clock pump)."""
+        return self.scheduler.poll()
+
+    def drain(self, tenant: str | None = None) -> int:
+        """Flush every pending window, due or not."""
+        return self.scheduler.drain(tenant)
+
+    def mutate(self, tenant: str, delta, **kwargs) -> Dict[str, Any]:
+        """Apply an edge delta to one tenant: its pending window drains
+        first (queued queries observe the pre-mutation snapshot — the
+        synchronous server's contract, lifted to the async queue), then
+        the snapshot advances. Other tenants are untouched."""
+        server = self.tenant(tenant)
+        self.scheduler.drain(tenant)
+        with self._tenant_locks[tenant]:
+            return server.mutate(delta, **kwargs)
+
+    def stats(self, tenant: str) -> Dict[str, Any]:
+        """One tenant's coherent snapshot: the synchronous server's
+        stats() (latency section now carrying the async instruments —
+        time_in_queue_s, window_occupancy, rejected) plus the scheduler's
+        admission/dispatch accounting under ``"scheduler"``."""
+        st = self.tenant(tenant).stats()
+        st["scheduler"] = self.scheduler.stats()
+        return st
+
+    # ----------------------------------------------------------- threaded
+    def start(self) -> "AsyncGraphServer":
+        """Run the event loop on a background thread (real clock)."""
+        if self._thread is None:
+            self._stop.clear()
+            self._thread = threading.Thread(
+                target=self.scheduler.run_loop, args=(self._stop,),
+                name="graph-serve-loop", daemon=True)
+            self._thread.start()
+        return self
+
+    def close(self) -> None:
+        """Stop the loop thread (if running) and drain every pending
+        window so no admitted ticket is left unresolved."""
+        if self._thread is not None:
+            self._stop.set()
+            self.scheduler.kick()
+            self._thread.join()
+            self._thread = None
+        self.scheduler.drain()
+
+    def __enter__(self) -> "AsyncGraphServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -7,3 +7,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: multi-device subprocess tests")
+    config.addinivalue_line(
+        "markers",
+        "timeout(seconds): per-test watchdog (enforced by pytest-timeout "
+        "in CI; inert locally when the plugin is absent)")

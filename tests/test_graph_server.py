@@ -269,13 +269,13 @@ def test_lru_counters_and_stats_accessor(graph):
     """The ISSUE-5 satellite: hit/miss/eviction counters on the LRU and a
     coherent GraphQueryServer.stats() snapshot."""
     c = LRUCache(capacity=2)
-    assert c.stats() == {"hits": 0, "misses": 0, "evictions": 0,
-                         "size": 0, "capacity": 2}
+    assert c.stats() == {"lookups": 0, "hits": 0, "misses": 0,
+                         "evictions": 0, "size": 0, "capacity": 2}
     c.put(("k", "bfs", 1), {}); c.put(("k", "bfs", 2), {})
     c.put(("k", "bfs", 3), {})            # evicts 1
     c.get(("k", "bfs", 3)); c.get(("k", "bfs", 1))
-    assert c.stats() == {"hits": 1, "misses": 1, "evictions": 1,
-                         "size": 2, "capacity": 2}
+    assert c.stats() == {"lookups": 2, "hits": 1, "misses": 1,
+                         "evictions": 1, "size": 2, "capacity": 2}
 
     srv = GraphQueryServer(graph, batch_size=4)
     srv.submit("bfs", 1); srv.flush()

@@ -1,0 +1,132 @@
+"""Property-based WindowScheduler invariants (engine-free).
+
+The scheduler is a pure state machine over an injected executor and a
+FakeClock, so hypothesis can drive arbitrary interleavings of
+submit/advance/poll single-threaded and check the contract after every
+step:
+
+* dispatch order inside every window is EDF (deadline, then priority,
+  then FIFO);
+* no admitted ticket waits past its window's expiry once the clock is
+  there and the scheduler is polled (no starvation);
+* queued depth never exceeds ``max_pending``; over-bound submissions
+  raise the typed BackpressureError and are counted — never lost;
+* every admitted ticket is dispatched exactly once (conservation).
+
+Runs wherever hypothesis is installed (CI); skips cleanly elsewhere —
+the deterministic fake-clock suite in tests/test_async_server.py keeps
+the same behaviours covered there.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serve.scheduler import (  # noqa: E402
+    BackpressureError, FakeClock, QueryTicket, WindowScheduler, _edf_key,
+)
+
+TENANTS = [("t0", 4, 0.05), ("t1", 3, 0.02)]  # (name, batch_size, max_wait)
+MAX_PENDING = 8
+
+submit_action = st.tuples(
+    st.just("submit"),
+    st.integers(min_value=0, max_value=len(TENANTS) - 1),
+    st.integers(min_value=0, max_value=5),                    # priority
+    st.one_of(st.none(),
+              st.floats(min_value=0.001, max_value=0.2,
+                        allow_nan=False, allow_infinity=False)))  # rel ddl
+advance_action = st.tuples(
+    st.just("advance"),
+    st.floats(min_value=0.0, max_value=0.1,
+              allow_nan=False, allow_infinity=False))
+actions_strategy = st.lists(st.one_of(submit_action, advance_action),
+                            min_size=1, max_size=60)
+
+
+@settings(max_examples=60, deadline=None)
+@given(actions=actions_strategy)
+def test_scheduler_invariants(actions):
+    clock = FakeClock()
+    batches = []
+    sched = WindowScheduler(lambda name, tks: batches.append((name, tks)),
+                            clock=clock, max_pending=MAX_PENDING)
+    for name, bs, mw in TENANTS:
+        sched.register(name, batch_size=bs, max_wait=mw)
+
+    admitted, attempts, rejections = [], 0, 0
+    for act in actions:
+        if act[0] == "submit":
+            _, ti, pr, ddl = act
+            name = TENANTS[ti][0]
+            tk = QueryTicket(name, "q", 0, priority=pr,
+                             deadline=None if ddl is None
+                             else clock.now() + ddl)
+            attempts += 1
+            try:
+                sched.submit(tk)
+                admitted.append(tk)
+            except BackpressureError as e:
+                rejections += 1
+                # typed and truthful: refused at the bound, never below it
+                assert e.depth == MAX_PENDING == e.max_pending
+                assert not tk.done()
+            # depth bound holds after every admission decision
+            assert sched.pending() <= MAX_PENDING
+        else:
+            clock.advance(act[1])
+            sched.poll()
+            # no starvation: once polled, nothing still queued is past
+            # its window's due instant
+            nw = sched.next_wakeup()
+            assert nw is None or nw > clock.now()
+
+    sched.drain()
+    stats = sched.stats()
+
+    # rejections are counted, never lost or double-counted
+    assert stats["rejected"] == rejections
+    assert stats["admitted"] == len(admitted) == attempts - rejections
+    assert stats["depth_high_water"] <= MAX_PENDING
+
+    # conservation: every admitted ticket dispatched exactly once
+    assert stats["pending"] == 0 and not any(stats["windows"].values())
+    assert stats["dispatched"] == len(admitted)
+    seen = [tk for _, tks in batches for tk in tks]
+    assert len(seen) == len(admitted)
+    assert {id(t) for t in seen} == {id(t) for t in admitted}
+
+    # EDF inside every dispatched window; windows never mix tenants
+    for name, tks in batches:
+        assert all(t.tenant == name for t in tks)
+        keys = [_edf_key(t) for t in tks]
+        assert keys == sorted(keys)
+        assert all(t.dispatched_at >= t.admitted_at for t in tks)
+
+
+@settings(max_examples=30, deadline=None)
+@given(fills=st.integers(min_value=1, max_value=12))
+def test_bucket_fill_is_due_immediately(fills):
+    clock = FakeClock()
+    batches = []
+    sched = WindowScheduler(lambda name, tks: batches.append(tks),
+                            clock=clock, max_pending=64)
+    sched.register("t", batch_size=4, max_wait=10.0)
+    for _ in range(fills):
+        sched.submit(QueryTicket("t", "q", 0))
+    sched.poll()                       # no clock advance at all
+    flushed = sum(len(b) for b in batches)
+    # a filled bucket makes the whole window due on size alone (the
+    # engine re-chunks into batch_size buckets downstream); a partial
+    # window waits on time
+    assert flushed == (fills if fills >= 4 else 0)
+    assert sched.pending() == fills - flushed
+
+
+@settings(max_examples=30, deadline=None)
+@given(dt=st.floats(max_value=-1e-9, min_value=-1e6,
+                    allow_nan=False, allow_infinity=False))
+def test_fake_clock_rejects_time_travel(dt):
+    clock = FakeClock()
+    with pytest.raises(ValueError):
+        clock.advance(dt)

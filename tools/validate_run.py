@@ -28,7 +28,8 @@ import compare_bench  # noqa: E402
 #: The CI bench-smoke module set: every module with asserted, checksummed,
 #: quick-mode-stable rows (the same list .github/workflows/ci.yml runs).
 SMOKE_MODULES = ("analytics,table4,pipeline_overlap,partition_balance,"
-                 "dynamic_updates,merge_collectives,phase_trace")
+                 "dynamic_updates,merge_collectives,phase_trace,"
+                 "serving_load")
 
 
 def run_benches(only: str, quick: bool, out: pathlib.Path) -> int:
