@@ -5,8 +5,9 @@ from repro.core.semiring import (  # noqa: F401
     Semiring,
 )
 from repro.core.formats import (  # noqa: F401
-    BSRMatrix, COOMatrix, CSCMatrix, CSRMatrix, PaddedBSR,
-    build_bsr, build_bsr_padded, build_coo, build_csc, build_csr,
+    BSRMatrix, COOMatrix, CSCMatrix, CSRMatrix, PaddedBSR, SlicedELL,
+    autotune_sell, build_bsr, build_bsr_padded, build_coo, build_csc,
+    build_csr, build_sell, sell_stream_cost,
 )
 from repro.core.spmv import (  # noqa: F401
     spmv, spmv_batch, spmv_bsr_ref, spmv_coo, spmv_csr,

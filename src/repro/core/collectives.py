@@ -310,6 +310,39 @@ def _run_stage(block: Array, sr: Semiring, st: MergeStage) -> Array:
     return acc
 
 
+def merge_chunks(y_chunks: Array, sr: Semiring, plan: MergePlan) -> Array:
+    """Merge partials that arrive **already chunk-major** — ``y_chunks``
+    is [d, m/d, ...], the layout the fused kernels' Retrieve epilogue
+    scatters into (kernels/semiring_spmv.py ``chunks=``) — so the Merge
+    phase starts directly from the kernel's output instead of
+    round-tripping a flat [m] partial through a reshape.
+
+    Ring and the generic flat exchange consume the chunks natively; the
+    psum-flat and radix (tree/staged2d) schedules view them flat — a
+    zero-copy reshape, [d, m/d] row-major *is* [m] — and share
+    :func:`merge`'s code path, which keeps every topology bit-identical
+    to its unfused ancestor (same ⊕ order, same XLA collectives).
+    """
+    d = plan.axis_size
+    assert y_chunks.shape[0] == d, (y_chunks.shape, d)
+    if plan.topology == "ring":
+        i = jax.lax.axis_index(plan.axis_name)
+        perm = [(j, (j + 1) % d) for j in range(d)]
+        acc = jax.lax.dynamic_index_in_dim(y_chunks, (i - 1) % d, 0,
+                                           keepdims=False)
+        for s in range(d - 1):
+            acc = jax.lax.ppermute(acc, plan.axis_name, perm)
+            local = jax.lax.dynamic_index_in_dim(y_chunks, (i - 2 - s) % d, 0,
+                                                 keepdims=False)
+            acc = sr.add(acc, local)
+        return acc
+    if plan.topology == "flat" and sr.collective != "psum":
+        exchanged = jax.lax.all_to_all(y_chunks, plan.axis_name,
+                                       split_axis=0, concat_axis=0)
+        return sr.add_reduce(exchanged, axis=0)
+    return merge(y_chunks.reshape((-1,) + y_chunks.shape[2:]), sr, plan)
+
+
 def merge(y_partial: Array, sr: Semiring, plan: Optional[MergePlan],
           *, axis: int = 0) -> Array:
     """⊕-reduce-scatter ``y_partial`` along ``axis`` per ``plan`` — the

@@ -63,7 +63,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core.collectives import merge as merge_collective
-from repro.core.collectives import plan_merge
+from repro.core.collectives import merge_chunks, plan_merge
 from repro.obs import trace
 from repro.core.partition import PartitionedMatrix
 from repro.core.semiring import Semiring
@@ -90,6 +90,33 @@ def _local_matvec(a_local, x_full: Array, sr: Semiring, kernel: str, impl: str) 
         return _spmv(a_local, x_full, sr, impl=impl)
     f = frontier_from_dense(x_full, sr)
     return _spmspv(a_local, f, sr, impl=impl)
+
+
+def _check_fused(pm: PartitionedMatrix) -> None:
+    if pm.fmt != "bsr":
+        raise ValueError(
+            f"fused=True streams ELL-of-tiles shards and needs fmt='bsr'; "
+            f"this partition holds fmt={pm.fmt!r}")
+
+
+def _fused_partials(a_local, x_full: Array, sr: Semiring, kernel: str,
+                    d: int):
+    """Fused Load+Kernel partials for a merge over ``d`` chunks.  When the
+    block-row count divides evenly the kernel scatters its output
+    chunk-major (the fused Retrieve epilogue) for merge_chunks; otherwise
+    it emits the flat layout and the merge reshapes as before — either
+    way the tile streaming itself is double-buffered.  Returns
+    (partials, chunked?)."""
+    from repro.kernels import ops  # deferred: kernels import pallas
+
+    mb = a_local.tiles.shape[0]
+    chunks = d if mb % d == 0 else None
+    if kernel == "spmv":
+        y = ops.semiring_spmv_fused(a_local, x_full, sr, chunks=chunks)
+    else:
+        f = frontier_from_dense(x_full, sr)
+        y = ops.semiring_spmspv_fused(a_local, f, sr, chunks=chunks)
+    return y, chunks is not None
 
 
 def gather_frontier(x_local: Array, sr: Semiring, f_local: int,
@@ -135,6 +162,7 @@ def make_distributed_matvec(
     f_local: int | None = None,
     topology: str = "flat",
     merge_order: str = "rc",
+    fused: bool = False,
 ) -> Callable[[object, Array], Array]:
     """Build `fn(parts, x_sharded) -> y_sharded` under shard_map.
 
@@ -154,8 +182,18 @@ def make_distributed_matvec(
     ``merge_order`` is the staged2d stage order). Output layout and — on
     order-exact data — bits are identical across topologies; the row
     strategy has no Merge, so the choice is a no-op there.
+
+    ``fused=True`` (fmt="bsr" only) swaps the local compute for the
+    double-buffered streaming kernels (kernels/ops.semiring_spmv_fused /
+    _spmspv_fused): adjacency tiles stay in ANY/HBM and only real /
+    frontier-active slots cross into VMEM, prefetched one tile ahead;
+    where the block grid allows, the kernel also scatters its partials
+    chunk-major so the Merge starts from the kernel's own output
+    (collectives.merge_chunks).  Bit-identical to ``fused=False``.
     """
     _check_plan(pm, strategy)
+    if fused:
+        _check_fused(pm)
     ar, ac = axis_names
     flat = (ar, ac)
     r_parts, c_parts = pm.grid
@@ -168,15 +206,17 @@ def make_distributed_matvec(
     def strip_lead(a_tree):
         return jax.tree.map(lambda x: x[0], a_tree)
 
+    loc_impl = "fused" if fused else impl
+
     if strategy == "row":
         def body(parts, x):
             a_local = strip_lead(parts)
             if compressed:
                 f = gather_frontier(x[0], sr, f_local, flat)       # Load
-                y = _spmspv(a_local, f, sr, impl=impl)             # Kernel
+                y = _spmspv(a_local, f, sr, impl=loc_impl)         # Kernel
             else:
                 x_full = jax.lax.all_gather(x, flat, tiled=True).reshape(-1)
-                y = _local_matvec(a_local, x_full, sr, kernel, impl)
+                y = _local_matvec(a_local, x_full, sr, kernel, loc_impl)
             return y[None]  # already row-sharded; no Retrieve/Merge
 
         in_specs = (a_specs, P(flat))
@@ -185,8 +225,14 @@ def make_distributed_matvec(
     elif strategy == "col":
         def body(parts, x):
             a_local = strip_lead(parts)
-            y_partial = _local_matvec(a_local, x[0], sr, kernel, impl)  # Kernel
-            y = merge_collective(y_partial, sr, col_mp)     # Retrieve+Merge
+            if fused:
+                y_partial, chunked = _fused_partials(a_local, x[0], sr,
+                                                     kernel, d)
+                y = (merge_chunks(y_partial, sr, col_mp) if chunked
+                     else merge_collective(y_partial, sr, col_mp))
+            else:
+                y_partial = _local_matvec(a_local, x[0], sr, kernel, impl)
+                y = merge_collective(y_partial, sr, col_mp)  # Retrieve+Merge
             return y[None]
 
         in_specs = (a_specs, P(flat))
@@ -204,7 +250,13 @@ def make_distributed_matvec(
             # ar assembles exactly column block c on every grid row.
             if compressed:
                 f = gather_frontier(x[0, 0], sr, f_local, ar)
-                y_partial = _spmspv(a_local, f, sr, impl=impl)
+                y_partial = _spmspv(a_local, f, sr, impl=loc_impl)
+            elif fused:
+                x_cols = jax.lax.all_gather(x[0, 0], ar, tiled=True).reshape(-1)
+                y_partial, chunked = _fused_partials(a_local, x_cols, sr,
+                                                     kernel, c_parts)
+                if chunked:
+                    return merge_chunks(y_partial, sr, col2d_mp)[None, None]
             else:
                 x_cols = jax.lax.all_gather(x[0, 0], ar, tiled=True).reshape(-1)
                 y_partial = _local_matvec(a_local, x_cols, sr, kernel, impl)
@@ -481,7 +533,7 @@ def _traced_phase(fn, name: str, attrs: dict):
 def build_phase_fns(mesh: Mesh, pm: PartitionedMatrix, sr: Semiring,
                     strategy: str, kernel: str, f_local: int | None = None,
                     donate: bool = False, topology: str = "flat",
-                    merge_order: str = "rc"):
+                    merge_order: str = "rc", fused: bool = False):
     """Per-phase jitted closures for one Fig.-3 strategy (see the module
     docstring for the phase vocabulary). Returns a dict:
 
@@ -517,8 +569,22 @@ def build_phase_fns(mesh: Mesh, pm: PartitionedMatrix, sr: Semiring,
     ``e2e`` program alike; the per-phase split — and with it the pipeline
     overlap in core.pipeline — is unchanged, since every topology is one
     jittable closure with the same in/out layout.
+
+    ``fused=True`` (fmt="bsr" only) restructures the phase dict around the
+    double-buffered streaming kernels: the tile Load happens *inside* the
+    kernel (ANY/HBM → two-slot VMEM window, one tile ahead), and for the
+    col/2d strategies the Kernel and Retrieve+Merge run as ONE jitted
+    program — the kernel scatters chunk-major partials that
+    collectives.merge_chunks consumes directly, so no flat partial ever
+    materialises between separate phase programs. Consequently
+    ``retrieve_merge`` is None and the ``kernel`` closure returns
+    already-merged output; run_phases_once / iterate_phases handle that
+    shape unchanged, and the unfused dict (``fused=False``) is the
+    bit-identity oracle (asserted in tests/test_distributed.py).
     """
     _check_plan(pm, strategy)
+    if fused:
+        _check_fused(pm)
     ar, ac = "dr", "dc"
     flat = (ar, ac)
     d = pm.n_devices
@@ -530,13 +596,16 @@ def build_phase_fns(mesh: Mesh, pm: PartitionedMatrix, sr: Semiring,
         rm_jit_kwargs["donate_argnums"] = (1,)
     fns = {"feedback": None}
 
+    loc_impl = "fused" if fused else "auto"
+
     if strategy == "row":
         load = shard_map(
             lambda x: jax.lax.all_gather(x, flat, tiled=True).reshape(-1)[None],
             mesh=mesh, in_specs=P(flat), out_specs=P(flat), check_rep=False)
 
         def kern(parts, x_full):
-            return _local_matvec(strip(parts), x_full[0], sr, kernel, "auto")[None]
+            return _local_matvec(strip(parts), x_full[0], sr, kernel,
+                                 loc_impl)[None]
 
         kern_sm = shard_map(kern, mesh=mesh, in_specs=(a_specs, P(flat)),
                             out_specs=P(flat), check_rep=False)
@@ -546,18 +615,37 @@ def build_phase_fns(mesh: Mesh, pm: PartitionedMatrix, sr: Semiring,
         fns["retrieve_merge"] = None        # row-wise: output stays sharded
 
     elif strategy == "col":
-        def kern(parts, x):
-            return _local_matvec(strip(parts), x[0], sr, kernel, "auto")[None]
+        if fused:
+            # Kernel + Retrieve + Merge as one program: the streaming
+            # kernel scatters chunk-major partials, merge_chunks folds
+            # them — no flat partial between phase programs.
+            def kern_f(parts, x):
+                y_partial, chunked = _fused_partials(strip(parts), x[0], sr,
+                                                     kernel, d)
+                y = (merge_chunks(y_partial, sr, col_mp) if chunked
+                     else merge_collective(y_partial, sr, col_mp))
+                return y[None]
 
-        kern_sm = shard_map(kern, mesh=mesh, in_specs=(a_specs, P(flat)),
-                            out_specs=P(flat), check_rep=False)
-        rm = shard_map(
-            lambda y: merge_collective(y[0], sr, col_mp)[None],
-            mesh=mesh, in_specs=P(flat), out_specs=P(flat), check_rep=False)
-        fns["load"] = None                  # input already sharded
-        fns["kernel"] = jax.jit(lambda parts, xs, _xf: kern_sm(parts, xs))
-        fns["retrieve_merge"] = jax.jit(lambda parts, ys: rm(ys),
-                                        **rm_jit_kwargs)
+            km_sm = shard_map(kern_f, mesh=mesh, in_specs=(a_specs, P(flat)),
+                              out_specs=P(flat), check_rep=False)
+            fns["load"] = None
+            fns["kernel"] = jax.jit(lambda parts, xs, _xf: km_sm(parts, xs))
+            fns["retrieve_merge"] = None    # folded into the kernel program
+        else:
+            def kern(parts, x):
+                return _local_matvec(strip(parts), x[0], sr, kernel,
+                                     "auto")[None]
+
+            kern_sm = shard_map(kern, mesh=mesh, in_specs=(a_specs, P(flat)),
+                                out_specs=P(flat), check_rep=False)
+            rm = shard_map(
+                lambda y: merge_collective(y[0], sr, col_mp)[None],
+                mesh=mesh, in_specs=P(flat), out_specs=P(flat),
+                check_rep=False)
+            fns["load"] = None              # input already sharded
+            fns["kernel"] = jax.jit(lambda parts, xs, _xf: kern_sm(parts, xs))
+            fns["retrieve_merge"] = jax.jit(lambda parts, ys: rm(ys),
+                                            **rm_jit_kwargs)
 
     elif strategy == "2d":
         r_parts, c_parts = pm.grid
@@ -569,22 +657,41 @@ def build_phase_fns(mesh: Mesh, pm: PartitionedMatrix, sr: Semiring,
             lambda x: jax.lax.all_gather(x[0, 0], ar, tiled=True)[None, None],
             mesh=mesh, in_specs=P(ar, ac), out_specs=P(ar, ac), check_rep=False)
 
-        def kern(parts, xc):
-            a_local = strip(strip(parts))
-            return _local_matvec(a_local, xc[0, 0], sr, kernel, "auto")[None, None]
+        if fused:
+            def kern_f(parts, xc):
+                a_local = strip(strip(parts))
+                y_partial, chunked = _fused_partials(a_local, xc[0, 0], sr,
+                                                     kernel, c_parts)
+                y = (merge_chunks(y_partial, sr, col2d_mp) if chunked
+                     else merge_collective(y_partial, sr, col2d_mp))
+                return y[None, None]
 
-        kern_sm = shard_map(kern, mesh=mesh, in_specs=(a2, P(ar, ac)),
-                            out_specs=P(ar, ac), check_rep=False)
-        rm = shard_map(
-            lambda y: merge_collective(y[0, 0], sr, col2d_mp)[None, None],
-            mesh=mesh, in_specs=P(ar, ac), out_specs=P(ar, ac), check_rep=False)
+            km_sm = shard_map(kern_f, mesh=mesh, in_specs=(a2, P(ar, ac)),
+                              out_specs=P(ar, ac), check_rep=False)
+            fns["load"] = jax.jit(
+                lambda parts, xs: load(vec_to_2d_layout(xs, pm.grid)))
+            fns["kernel"] = jax.jit(
+                lambda parts, xs, xf: km_sm(reshape_parts(parts), xf))
+            fns["retrieve_merge"] = None    # folded into the kernel program
+        else:
+            def kern(parts, xc):
+                a_local = strip(strip(parts))
+                return _local_matvec(a_local, xc[0, 0], sr, kernel,
+                                     "auto")[None, None]
 
-        fns["load"] = jax.jit(
-            lambda parts, xs: load(vec_to_2d_layout(xs, pm.grid)))
-        fns["kernel"] = jax.jit(
-            lambda parts, xs, xf: kern_sm(reshape_parts(parts), xf))
-        fns["retrieve_merge"] = jax.jit(lambda parts, ys: rm(ys),
-                                        **rm_jit_kwargs)
+            kern_sm = shard_map(kern, mesh=mesh, in_specs=(a2, P(ar, ac)),
+                                out_specs=P(ar, ac), check_rep=False)
+            rm = shard_map(
+                lambda y: merge_collective(y[0, 0], sr, col2d_mp)[None, None],
+                mesh=mesh, in_specs=P(ar, ac), out_specs=P(ar, ac),
+                check_rep=False)
+
+            fns["load"] = jax.jit(
+                lambda parts, xs: load(vec_to_2d_layout(xs, pm.grid)))
+            fns["kernel"] = jax.jit(
+                lambda parts, xs, xf: kern_sm(reshape_parts(parts), xf))
+            fns["retrieve_merge"] = jax.jit(lambda parts, ys: rm(ys),
+                                            **rm_jit_kwargs)
         # R+M lands chunks row-major ([r, c] = chunk r*C + c); flattening
         # restores the canonical layout the Load expects next iteration.
         fns["feedback"] = jax.jit(lambda ys: ys.reshape(d, -1))
@@ -595,7 +702,8 @@ def build_phase_fns(mesh: Mesh, pm: PartitionedMatrix, sr: Semiring,
                                                  kernel=kernel,
                                                  f_local=f_local,
                                                  topology=topology,
-                                                 merge_order=merge_order))
+                                                 merge_order=merge_order,
+                                                 fused=fused))
     if f_local is not None and strategy in ("row", "2d"):
         # compressed Load: time the per-shard compress + frontier gather
         axis = flat if strategy == "row" else ar
@@ -636,7 +744,7 @@ def build_phase_fns(mesh: Mesh, pm: PartitionedMatrix, sr: Semiring,
     wire = mp.wire_elements(m_merge) if strategy != "row" else 0.0
     steps = mp.n_steps if strategy != "row" else 0
     base = {"strategy": strategy, "kernel": kernel, "topology": topology,
-            "devices": d}
+            "devices": d, "fused": fused}
     attrs = {
         "load": {**base, "phase": "load", "bytes": load_elems * elem},
         "kernel": {**base, "phase": "kernel"},

@@ -193,6 +193,75 @@ class PaddedBSR:
         return self.tiles.shape[1]
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SlicedELL:
+    """sell-C-σ of tiles: block rows sorted by tile count inside σ-row
+    windows, grouped into slices of C rows, each slice padded only to *its
+    own* max slot count (vs the global max of :class:`PaddedBSR`).  On
+    hub-skewed rmat graphs this collapses the pad volume the few hub rows
+    force onto every other row.
+
+    tiles:     [slot_total, bm, bn]  flat slice-major payloads; pad slots
+               hold the ⊕-identity tile (same convention as PaddedBSR)
+    tile_cols: [slot_total] int32    pad slots point at tile-column 0
+    row_meta:  [mb, 3] int32 in compute (permuted) order:
+               (out_block, base, n_real) — program i streams
+               tiles[base : base + n_real] and ⊕-scatters into output
+               block ``out_block`` (the Retrieve-side permutation).
+    """
+
+    tiles: Array
+    tile_cols: Array
+    row_meta: Array
+    shape: Tuple[int, int]
+    block: Tuple[int, int]
+    slice_height: int
+    sigma: int
+
+    def tree_flatten(self):
+        return (self.tiles, self.tile_cols, self.row_meta), (
+            self.shape, self.block, self.slice_height, self.sigma)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def n_block_rows(self) -> int:
+        return self.row_meta.shape[0]
+
+    @property
+    def slot_total(self) -> int:
+        return self.tiles.shape[0]
+
+    @property
+    def real_slots(self) -> int:
+        return int(np.asarray(self.row_meta[:, 2]).sum())
+
+    def to_dense(self, sr: Semiring) -> Array:
+        """Round-trip helper (tests): ⊕-scatter every real tile back into a
+        dense [mb·bm, nb·bn] array in the original (unpermuted) row order."""
+        bm, bn = self.block
+        m, n = self.shape
+        dense = np.full((m, n), sr.zero, dtype=np.dtype(sr.dtype))
+        meta = np.asarray(self.row_meta)
+        tiles = np.asarray(self.tiles)
+        cols = np.asarray(self.tile_cols)
+        for out_block, base, n_real in meta:
+            r0 = int(out_block) * bm
+            for j in range(int(n_real)):
+                c0 = int(cols[base + j]) * bn
+                blk = dense[r0:r0 + bm, c0:c0 + bn]
+                if sr.collective == "pmin":
+                    np.minimum(blk, tiles[base + j], out=blk)
+                elif sr.collective == "psum":
+                    np.add(blk, tiles[base + j], out=blk)
+                else:
+                    np.maximum(blk, tiles[base + j], out=blk)
+        return jnp.asarray(dense)
+
+
 # ---------------------------------------------------------------------------
 # Builders (host-side, numpy; run once per dataset, amortized like the paper's
 # matrix-load phase which §4.1 excludes from timing).
@@ -303,12 +372,14 @@ def build_bsr(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
     )
 
 
-def build_bsr_padded(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
-                     shape: Tuple[int, int], sr: Semiring,
-                     block: Tuple[int, int] = (128, 128),
-                     slots: int | None = None) -> PaddedBSR:
-    """ELL-of-tiles builder: densify nonzero tiles, pad each block row to a
-    uniform slot count (static Pallas grid)."""
+def _densify_tiles(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+                   shape: Tuple[int, int], sr: Semiring,
+                   block: Tuple[int, int]) -> list[dict[int, np.ndarray]]:
+    """Shared tile-densification pass: per block row, a {tile_col: dense
+    (bm, bn) tile} dict (tile background = ⊕-identity).  Both ELL-of-tiles
+    (:func:`build_bsr_padded`) and sliced-ELL (:func:`build_sell`) builders
+    consume this, so a (PaddedBSR, SlicedELL) pair built from the same edge
+    list holds bit-identical tile payloads in the same per-row order."""
     bm, bn = block
     m, n = shape
     mb, nb = -(-m // bm), -(-n // bn)
@@ -336,6 +407,21 @@ def build_bsr_padded(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
         else:
             np.maximum.at(tile, (lr, lc), vals_s[s:e].astype(np_dtype))
         per_row_tiles[tr][tc] = tile
+    return per_row_tiles
+
+
+def build_bsr_padded(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+                     shape: Tuple[int, int], sr: Semiring,
+                     block: Tuple[int, int] = (128, 128),
+                     slots: int | None = None) -> PaddedBSR:
+    """ELL-of-tiles builder: densify nonzero tiles, pad each block row to a
+    uniform slot count (static Pallas grid)."""
+    bm, bn = block
+    m, n = shape
+    mb, nb = -(-m // bm), -(-n // bn)
+    background = np.inf if sr.collective == "pmin" else 0
+    np_dtype = np.dtype(sr.dtype)
+    per_row_tiles = _densify_tiles(rows, cols, vals, shape, sr, block)
 
     t_needed = max(1, max((len(d) for d in per_row_tiles), default=1))
     slots = slots or t_needed
@@ -352,6 +438,134 @@ def build_bsr_padded(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
         shape=(mb * bm, nb * bn),
         block=block,
     )
+
+
+def build_sell(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+               shape: Tuple[int, int], sr: Semiring,
+               block: Tuple[int, int] = (128, 128),
+               c: int = 8, sigma: int | None = None) -> SlicedELL:
+    """sell-C-σ builder: densify tiles (same pass as :func:`build_bsr_padded`),
+    sort block rows by descending tile count within σ-row windows, group into
+    slices of ``c`` rows, pad each slice to its own max slot count.
+
+    ``sigma=None`` sorts globally (σ = mb).  Per-row tile order is tile-col
+    sorted — identical to the PaddedBSR slot order, so a fused kernel that
+    streams ``tiles[base : base + n_real]`` reduces in exactly the order the
+    ELL kernel does (bit-identity across formats for every semiring).
+    """
+    bm, bn = block
+    m, n = shape
+    mb, nb = -(-m // bm), -(-n // bn)
+    background = np.inf if sr.collective == "pmin" else 0
+    np_dtype = np.dtype(sr.dtype)
+    per_row_tiles = _densify_tiles(rows, cols, vals, shape, sr, block)
+    counts = np.array([len(d) for d in per_row_tiles], dtype=np.int64)
+
+    sigma = sigma or mb
+    if sigma < c:
+        raise ValueError(f"sigma={sigma} must be >= slice height c={c}")
+    perm: list[int] = []
+    for w0 in range(0, mb, sigma):
+        w1 = min(w0 + sigma, mb)
+        local = np.argsort(-counts[w0:w1], kind="stable") + w0
+        perm.extend(int(i) for i in local)
+    perm_np = np.asarray(perm, dtype=np.int64)
+
+    # Per-slice width = that slice's max tile count (>=1 so every row owns at
+    # least one slot and the flat layout never aliases across rows).
+    bases = np.zeros((mb,), dtype=np.int64)
+    slot_total = 0
+    for s0 in range(0, mb, c):
+        s1 = min(s0 + c, mb)
+        width = max(1, int(counts[perm_np[s0:s1]].max()))
+        for i in range(s0, s1):
+            bases[i] = slot_total + (i - s0) * width
+        slot_total += (s1 - s0) * width
+
+    tiles = np.full((max(1, slot_total), bm, bn), background, dtype=np_dtype)
+    tile_cols_np = np.zeros((max(1, slot_total),), dtype=np.int32)
+    row_meta = np.zeros((mb, 3), dtype=np.int32)
+    for i, r in enumerate(perm_np):
+        d = per_row_tiles[int(r)]
+        base = int(bases[i])
+        row_meta[i] = (int(r), base, len(d))
+        for j, (tc, tile) in enumerate(sorted(d.items())):
+            tiles[base + j] = tile
+            tile_cols_np[base + j] = tc
+    return SlicedELL(
+        tiles=jnp.asarray(tiles),
+        tile_cols=jnp.asarray(tile_cols_np),
+        row_meta=jnp.asarray(row_meta),
+        shape=(mb * bm, nb * bn),
+        block=block,
+        slice_height=c,
+        sigma=sigma,
+    )
+
+
+def sell_stream_cost(counts: np.ndarray, block: Tuple[int, int],
+                     c: int, sigma: int, elem_bytes: int = 4) -> dict:
+    """Deterministic bytes model for one sell-C-σ candidate, computed from
+    per-block-row tile counts alone (no tiles materialized).  The fused
+    kernel streams only real slots plus one x-block gather per real slot;
+    pad slots cost storage (and Load-phase shard bytes) but are never
+    DMA'd, so they enter with a discounted weight."""
+    bm, bn = block
+    mb = counts.shape[0]
+    sigma = sigma or mb
+    perm: list[np.ndarray] = []
+    for w0 in range(0, mb, sigma):
+        w1 = min(w0 + sigma, mb)
+        perm.append(np.sort(counts[w0:w1])[::-1])
+    sorted_counts = np.concatenate(perm) if perm else np.zeros((0,), np.int64)
+    slot_total = 0
+    for s0 in range(0, mb, c):
+        s1 = min(s0 + c, mb)
+        slot_total += (s1 - s0) * max(1, int(sorted_counts[s0:s1].max()))
+    real = int(counts.sum())
+    tile_bytes = bm * bn * elem_bytes
+    streamed = real * (tile_bytes + bn * elem_bytes) + mb * bm * elem_bytes
+    stored = slot_total * tile_bytes
+    return {
+        "slot_total": int(slot_total),
+        "real_slots": real,
+        "streamed_bytes": int(streamed),
+        "stored_bytes": int(stored),
+        # streamed dominates; storage/Load padding enters at 1/8 weight
+        "cost": int(streamed + stored // 8),
+    }
+
+
+def autotune_sell(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+                  shape: Tuple[int, int], sr: Semiring,
+                  blocks: tuple = ((8, 8), (16, 16), (32, 32)),
+                  cs: tuple = (4, 8), sigmas: tuple = (None, 32),
+                  elem_bytes: int = 4):
+    """Static autotuner: sweep (block, C, σ) candidates, score each with the
+    deterministic :func:`sell_stream_cost` bytes model, build only the
+    winner.  Returns ``(SlicedELL, report)`` where ``report`` is the scored
+    candidate list (best first) for logging/benchmark tables."""
+    report = []
+    for block in blocks:
+        bm, _ = block
+        m, _ = shape
+        mb = -(-m // bm)
+        trow, tcol = rows // block[0], cols // block[1]
+        keys = np.unique(trow.astype(np.int64) * (-(-shape[1] // block[1])) + tcol)
+        counts = np.bincount((keys // (-(-shape[1] // block[1]))).astype(np.int64),
+                             minlength=mb)
+        for c in cs:
+            for sigma in sigmas:
+                sig = sigma or mb
+                if sig < c:
+                    continue
+                stats = sell_stream_cost(counts, block, c, sig, elem_bytes)
+                report.append({"block": block, "c": c, "sigma": sig, **stats})
+    report.sort(key=lambda r: (r["cost"], r["block"], r["c"], r["sigma"]))
+    best = report[0]
+    sell = build_sell(rows, cols, vals, shape, sr, block=best["block"],
+                      c=best["c"], sigma=best["sigma"])
+    return sell, report
 
 
 def coo_from_dense(dense: np.ndarray, sr: Semiring):

@@ -74,6 +74,13 @@ def run_phases_once(fns: PhaseFns, parts, x: Array,
     Strategies with a folded phase (``None`` entry) skip it; a strategy
     whose Kernel is only available fused (compressed-Load rows) falls back
     to the ``e2e`` closure for the compute step.
+
+    ``build_phase_fns(fused=True)`` dicts run here unchanged: their
+    ``kernel`` closure already contains the Retrieve+Merge (the streaming
+    kernel scatters chunk-major partials straight into
+    collectives.merge_chunks), so ``retrieve_merge`` is None and the
+    pipeline simply has one less phase boundary to overlap — the overlap
+    moved *inside* the kernel program.
     """
     load = fns.get("load")
     kern = fns.get("kernel")

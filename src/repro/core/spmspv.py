@@ -198,5 +198,7 @@ def spmspv(a, x: Frontier, sr: Semiring, impl: str = "auto") -> Array:
 
         if impl == "ref":
             return ops.semiring_spmspv_ref(a, x, sr)
+        if impl == "fused":
+            return ops.semiring_spmspv_fused(a, x, sr)
         return ops.semiring_spmspv(a, x, sr)
     raise TypeError(type(a))

@@ -95,5 +95,7 @@ def spmv(a, x: Array, sr: Semiring, impl: str = "auto") -> Array:
 
         if impl == "ref":
             return ops.semiring_spmv_ref(a, x, sr)
+        if impl == "fused":
+            return ops.semiring_spmv_fused(a, x, sr)
         return ops.semiring_spmv(a, x, sr)
     raise TypeError(type(a))

@@ -371,3 +371,34 @@ def repair_choice(choice: PlannerChoice, graph, delta,
                          grid=choice.grid, plan=patched, costs=costs,
                          merge=choice.merge,
                          merge_order=choice.merge_order), False
+
+
+def kernel_stream_cost(mb: int, slots: int, real_slots: int,
+                       block: Tuple[int, int], n: int, *,
+                       elem_bytes: int = 4) -> dict:
+    """Modeled per-shard HBM bytes for the unfused vs fused Kernel phase
+    (ISSUE 9; the intra-kernel counterpart of merge_wire_cost's fabric
+    pricing).  The unfused ELL kernel's BlockSpec pipeline moves every
+    slot's tile plus one x block per grid step; the fused double-buffered
+    kernel (kernels/ops.semiring_spmv_fused) streams only the ``real_slots``
+    payload tiles and holds x resident, so its byte count drops by exactly
+    the pad volume plus the re-gathered x blocks.  Purely additive — the
+    strategy planner's estimate_phase_costs is untouched (its defaults pin
+    the committed baseline checksums); callers opt in when comparing
+    ``fused=`` execution plans or roofline positions.
+
+    Exact-count counterpart (from live metadata instead of aggregates):
+    kernels/ops.spmv_stream_stats / spmspv_stream_stats / sell_stream_stats.
+    """
+    bm, bn = block
+    y_bytes = mb * bm * elem_bytes
+    unfused = mb * slots * (bm * bn + bn) * elem_bytes + y_bytes
+    fused = (real_slots * bm * bn + n) * elem_bytes + y_bytes
+    ops = 2 * real_slots * bm * bn
+    return {
+        "unfused_bytes": unfused,
+        "fused_bytes": fused,
+        "unfused_ai": ops / max(1, unfused),
+        "fused_ai": ops / max(1, fused),
+        "bytes_ratio": unfused / max(1, fused),
+    }

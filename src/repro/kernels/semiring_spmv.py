@@ -69,3 +69,155 @@ def semiring_spmv_padded(tiles, tile_cols, x, *, sr: Semiring, interpret: bool =
         out_shape=jax.ShapeDtypeStruct((mb * bm,), x.dtype),
         interpret=interpret,
     )(tile_cols, tiles, x)
+
+
+# ---------------------------------------------------------------------------
+# Fused Load+Kernel: double-buffered DMA streaming (ISSUE 9 tentpole).
+#
+# The unfused kernel above lets the BlockSpec pipeline DMA whole-slot rows —
+# every grid step moves a tile whether it is payload or ⊕-identity pad.  The
+# fused variants below keep the adjacency in ANY (compiler-placed, HBM on
+# TPU) memory and stream only *real* tiles through a two-slot VMEM scratch
+# window: tile t+1's async copy is issued before tile t's compute runs — the
+# paper's "improved DMA engines with non-blocking capabilities" realized
+# inside the kernel rather than between phases.  Contributions are reduced
+# in the same per-slot order as the unfused kernel and skipped slots are
+# exact ⊕-identities, so results are bit-identical.
+# ---------------------------------------------------------------------------
+
+
+def _tile_contrib(a, xb, sr: Semiring, out_dtype):
+    if sr.mxu_eligible:
+        return jnp.dot(a, xb, preferred_element_type=jnp.float32).astype(out_dtype)
+    return sr.add_reduce(sr.mul(a, xb[None, :]), axis=1)
+
+
+def _stream_row(tiles_at, col_at, x_ref, n_real, *, sr: Semiring,
+                bm: int, bn: int, dtype):
+    """Shared double-buffered streaming loop: DMA tile ``j+1`` into the free
+    scratch slot while tile ``j`` computes; ⊕-fold contributions into a
+    carried accumulator.  ``tiles_at(j)``/``col_at(j)`` abstract the layout
+    (ELL [i, j] vs sliced-ELL [base + j] vs SpMSpV's permuted slots)."""
+
+    def body(scratch, sems):
+        def get_dma(slot, j):
+            return pltpu.make_async_copy(tiles_at(j), scratch.at[slot], sems.at[slot])
+
+        @pl.when(n_real > 0)
+        def _warmup():
+            get_dma(0, 0).start()
+
+        def loop(j, acc):
+            slot = jax.lax.rem(j, 2)
+
+            @pl.when(j + 1 < n_real)
+            def _prefetch():
+                get_dma(jax.lax.rem(j + 1, 2), j + 1).start()
+
+            get_dma(slot, j).wait()
+            a = scratch[slot]
+            xb = x_ref[pl.ds(col_at(j) * bn, bn)]
+            return sr.add(acc, _tile_contrib(a, xb, sr, acc.dtype))
+
+        acc0 = jnp.full((bm,), sr.zero, dtype)
+        return jax.lax.fori_loop(0, n_real, loop, acc0)
+
+    return pl.run_scoped(
+        body,
+        scratch=pltpu.VMEM((2, bm, bn), dtype),
+        sems=pltpu.SemaphoreType.DMA((2,)),
+    )
+
+
+def _emit(y_ref, acc, chunked: bool):
+    y_ref[...] = acc[None, :] if chunked else acc
+
+
+def _fused_kernel(meta_ref, tiles_ref, x_ref, y_ref, *, sr: Semiring,
+                  bm: int, bn: int, dtype, chunked: bool):
+    i = pl.program_id(0)
+    n_real = meta_ref[i, 0]
+    acc = _stream_row(lambda j: tiles_ref.at[i, j],
+                      lambda j: meta_ref[i, 1 + j],
+                      x_ref, n_real, sr=sr, bm=bm, bn=bn, dtype=dtype)
+    _emit(y_ref, acc, chunked)
+
+
+def _out_spec(mb: int, bm: int, chunks: int | None, out_block, dtype):
+    """Output spec pair: flat [mb·bm] or chunk-major [chunks, m_per] — the
+    fused Retrieve+Merge epilogue scatters straight into the layout
+    collectives.merge_chunks consumes (no flat→chunks reshape in Merge)."""
+    if chunks is None:
+        spec = pl.BlockSpec((bm,), lambda i, *pref: (out_block(i, *pref),))
+        return spec, jax.ShapeDtypeStruct((mb * bm,), dtype)
+    assert mb % chunks == 0, f"chunks={chunks} must divide mb={mb}"
+    rpc = mb // chunks  # block rows per chunk
+    spec = pl.BlockSpec(
+        (1, bm),
+        lambda i, *pref: (out_block(i, *pref) // rpc, out_block(i, *pref) % rpc))
+    return spec, jax.ShapeDtypeStruct((chunks, rpc * bm), dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("sr", "interpret", "chunks"))
+def semiring_spmv_fused_padded(tiles, meta, x, *, sr: Semiring,
+                               interpret: bool = True,
+                               chunks: int | None = None):
+    """Fused Load+Kernel SpMV: meta int32 [mb, 1+T] = (n_real | tile_cols).
+    Streams only the first n_real slots of each block row through the
+    double-buffered scratch; bit-identical to semiring_spmv_padded."""
+    mb, t_grid, bm, bn = tiles.shape
+    out_specs, out_shape = _out_spec(mb, bm, chunks, lambda i, meta: i, x.dtype)
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, sr=sr, bm=bm, bn=bn, dtype=x.dtype,
+                          chunked=chunks is not None),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(mb,),
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.ANY),   # tiles stay in HBM
+                pl.BlockSpec((x.shape[0],), lambda i, meta: (0,)),
+            ],
+            out_specs=out_specs,
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(meta, tiles, x)
+
+
+def _sell_kernel(meta_ref, cols_ref, tiles_ref, x_ref, y_ref, *, sr: Semiring,
+                 bm: int, bn: int, dtype, chunked: bool):
+    i = pl.program_id(0)
+    base = meta_ref[i, 1]
+    n_real = meta_ref[i, 2]
+    acc = _stream_row(lambda j: tiles_ref.at[base + j],
+                      lambda j: cols_ref[base + j],
+                      x_ref, n_real, sr=sr, bm=bm, bn=bn, dtype=dtype)
+    _emit(y_ref, acc, chunked)
+
+
+@functools.partial(jax.jit, static_argnames=("sr", "interpret", "chunks"))
+def semiring_spmv_sell(tiles, tile_cols, row_meta, x, *, sr: Semiring,
+                       interpret: bool = True, chunks: int | None = None):
+    """Fused Load+Kernel SpMV over the sliced-ELL (sell-C-σ) layout: tiles
+    flat [slot_total, bm, bn]; row_meta [mb, 3] = (out_block, base, n_real)
+    in compute order.  The output BlockSpec applies the row permutation
+    (Retrieve-side scatter), so y comes back in original row order."""
+    _, bm, bn = tiles.shape
+    mb = row_meta.shape[0]
+    out_specs, out_shape = _out_spec(mb, bm, chunks,
+                                     lambda i, meta, cols: meta[i, 0], x.dtype)
+    return pl.pallas_call(
+        functools.partial(_sell_kernel, sr=sr, bm=bm, bn=bn, dtype=x.dtype,
+                          chunked=chunks is not None),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(mb,),
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.ANY),
+                pl.BlockSpec((x.shape[0],), lambda i, meta, cols: (0,)),
+            ],
+            out_specs=out_specs,
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(row_meta, tile_cols, tiles, x)

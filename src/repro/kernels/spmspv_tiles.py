@@ -29,6 +29,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.semiring import Semiring
+from repro.kernels.semiring_spmv import _emit, _out_spec, _stream_row
 
 
 def _kernel(meta_ref, tiles_ref, x_ref, y_ref, *, sr: Semiring):
@@ -79,5 +80,43 @@ def semiring_spmspv_padded(tiles, meta, x, *, sr: Semiring, interpret: bool = Tr
             out_specs=pl.BlockSpec((bm,), lambda i, j, meta: (i,)),
         ),
         out_shape=jax.ShapeDtypeStruct((mb * bm,), x.dtype),
+        interpret=interpret,
+    )(meta, tiles, x)
+
+
+def _fused_kernel(meta_ref, tiles_ref, x_ref, y_ref, *, sr: Semiring,
+                  bm: int, bn: int, t_grid: int, dtype, chunked: bool):
+    i = pl.program_id(0)
+    n_active = meta_ref[i, 0]
+    acc = _stream_row(lambda j: tiles_ref.at[i, meta_ref[i, 1 + j]],
+                      lambda j: meta_ref[i, 1 + t_grid + j],
+                      x_ref, n_active, sr=sr, bm=bm, bn=bn, dtype=dtype)
+    _emit(y_ref, acc, chunked)
+
+
+@functools.partial(jax.jit, static_argnames=("sr", "interpret", "chunks"))
+def semiring_spmspv_fused_padded(tiles, meta, x, *, sr: Semiring,
+                                 interpret: bool = True,
+                                 chunks: int | None = None):
+    """Fused Load+Kernel SpMSpV: same meta layout as the unfused kernel, but
+    the adjacency stays in ANY/HBM and only frontier-active slots are DMA'd
+    through the double-buffered scratch (inactive slots issue *no* copy at
+    all, vs the unfused kernel's masked re-read of a resident slot).
+    Bit-identical to semiring_spmspv_padded."""
+    mb, t_grid, bm, bn = tiles.shape
+    out_specs, out_shape = _out_spec(mb, bm, chunks, lambda i, meta: i, x.dtype)
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, sr=sr, bm=bm, bn=bn, t_grid=t_grid,
+                          dtype=x.dtype, chunked=chunks is not None),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(mb,),
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.ANY),
+                pl.BlockSpec((x.shape[0],), lambda i, meta: (0,)),
+            ],
+            out_specs=out_specs,
+        ),
+        out_shape=out_shape,
         interpret=interpret,
     )(meta, tiles, x)

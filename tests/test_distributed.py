@@ -403,3 +403,83 @@ def test_merge_collectives_12dev_non_power_of_two():
     assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
     # 2 semirings x (col: 5 topologies + 2d: 4 topologies)
     assert "COLLECTIVES_NPO2_OK 18" in res.stdout, res.stdout
+
+
+FUSED_WORKER = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import *
+from repro.core.distributed import build_phase_fns, make_distributed_matvec
+from repro.core.pipeline import run_phases_once
+
+rng = np.random.default_rng(5)
+n = 128
+dense_np = (rng.random((n, n)) < 0.08).astype(np.float32) * rng.integers(1, 9, (n, n))
+rows, cols = np.nonzero(dense_np)
+vals = dense_np[rows, cols].astype(np.float32)
+mesh = jax.make_mesh((2, 4), ("dr", "dc"))
+
+checked = 0
+for sr in (PLUS_TIMES, MIN_PLUS, BOOL_OR_AND):
+    if sr.name == "min_plus":
+        x = np.where(rng.random(n) < 0.4, rng.integers(0, 9, n), np.inf).astype(np.float32)
+        v = vals; fill = np.inf
+    elif sr.name == "bool_or_and":
+        x = (rng.random(n) < 0.4).astype(np.int32)
+        v = np.ones_like(vals, dtype=np.int32); fill = 0
+    else:
+        x = np.where(rng.random(n) < 0.4, rng.integers(0, 9, n), 0).astype(np.float32)
+        v = vals; fill = 0.0
+    for strategy, grid in (("row", (8, 1)), ("col", (1, 8)), ("2d", (2, 4))):
+        pm = partition(rows, cols, v, (n, n), grid, "bsr", sr, block=(16, 16))
+        xs = jnp.asarray(pm.plan.shard_input_vector(x, fill), sr.dtype)
+        for topology in ("flat", "ring", "tree"):
+            # e2e: fused must be bit-identical to its unfused ancestor
+            y_u = pm.plan.unshard_output_vector(np.asarray(jax.jit(
+                make_distributed_matvec(mesh, pm, sr, strategy,
+                                        topology=topology))(pm.parts, xs)))
+            y_f = pm.plan.unshard_output_vector(np.asarray(jax.jit(
+                make_distributed_matvec(mesh, pm, sr, strategy,
+                                        topology=topology,
+                                        fused=True))(pm.parts, xs)))
+            np.testing.assert_array_equal(
+                y_f, y_u, err_msg=f"{sr.name}/{strategy}/{topology}")
+            checked += 1
+        # phase closures: fused folds Retrieve+Merge into the kernel
+        fns_u = build_phase_fns(mesh, pm, sr, strategy, kernel="spmv")
+        fns_f = build_phase_fns(mesh, pm, sr, strategy, kernel="spmv",
+                                fused=True)
+        if strategy != "row":
+            assert fns_f["retrieve_merge"] is None, strategy
+        y_pu = np.asarray(run_phases_once(fns_u, pm.parts, xs))
+        y_pf = np.asarray(run_phases_once(fns_f, pm.parts, xs))
+        np.testing.assert_array_equal(y_pf, y_pu,
+                                      err_msg=f"phases/{sr.name}/{strategy}")
+        checked += 1
+
+# fused demands the ELL-of-tiles stream: any other format must refuse
+pm = partition(rows, cols, vals, (n, n), (1, 8), "csc", PLUS_TIMES)
+try:
+    make_distributed_matvec(mesh, pm, PLUS_TIMES, "col", fused=True)
+    raise SystemExit("fused accepted a csc partition")
+except ValueError:
+    checked += 1
+print(f"FUSED_OK {checked}")
+"""
+
+
+@pytest.mark.slow
+def test_fused_distributed_bit_identical_8dev():
+    """The fused Load+Kernel(+Retrieve+Merge) path must be bit-identical
+    to the unfused four-phase ancestor for every strategy x topology x
+    semiring, both through make_distributed_matvec and through the
+    build_phase_fns closures (whose fused dicts fold retrieve_merge away),
+    and must reject non-BSR partitions."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = REPO_SRC + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run([sys.executable, "-c", FUSED_WORKER], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
+    # 3 semirings x 3 strategies x (3 topologies + 1 phase check) + 1 raise
+    assert "FUSED_OK 37" in res.stdout, res.stdout

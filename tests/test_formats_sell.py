@@ -1,0 +1,124 @@
+"""sell-C-σ (SlicedELL) round-trip: COO → sliced-ELL → dense must be exact
+across the paper's Table-2 families (road / uniform / rmat) and the edge
+cases the format exists for — empty block rows and a single hub row — plus
+the static autotuner's cost ordering."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    MIN_PLUS, PLUS_TIMES, autotune_sell, build_bsr_padded, build_sell,
+    sell_stream_cost,
+)
+from repro.graphs import datasets
+
+
+def _dense_oracle(rows, cols, vals, shape, sr):
+    bg = np.inf if sr.collective == "pmin" else 0
+    d = np.full(shape, bg, dtype=np.asarray(vals).dtype)
+    if sr.collective == "psum":
+        np.add.at(d, (rows, cols), vals)
+    elif sr.collective == "pmin":
+        np.minimum.at(d, (rows, cols), vals)
+    else:
+        np.maximum.at(d, (rows, cols), vals)
+    return d
+
+
+def _family_coo(fam, sr):
+    g = {"road": lambda: datasets.road_graph(256, 2.6, seed=0),
+         "uniform": lambda: datasets.uniform_graph(192, 800, seed=0),
+         "rmat": lambda: datasets.rmat_graph(256, 1200, skew=0.6, seed=0)}[fam]()
+    rows = g.cols.astype(np.int64)     # transposed, like the engines
+    cols = g.rows.astype(np.int64)
+    n_pad = -(-g.n // 32) * 32
+    rng = np.random.default_rng(3)
+    vals = rng.integers(1, 9, rows.shape[0]).astype(np.float32)
+    if sr.collective == "pmin":
+        # keep duplicates order-independent for the min-scatter oracle too
+        vals = np.ones_like(vals)
+    return rows, cols, vals, (n_pad, n_pad)
+
+
+@pytest.mark.parametrize("sr", [PLUS_TIMES, MIN_PLUS], ids=lambda s: s.name)
+@pytest.mark.parametrize("fam", ["road", "uniform", "rmat"])
+@pytest.mark.parametrize("c,sigma", [(4, None), (2, 8)])
+def test_sell_round_trip_families(fam, sr, c, sigma):
+    rows, cols, vals, shape, = _family_coo(fam, sr)
+    s = build_sell(rows, cols, vals, shape, sr, block=(8, 8), c=c, sigma=sigma)
+    np.testing.assert_array_equal(s.to_dense(sr),
+                                  _dense_oracle(rows, cols, vals, shape, sr))
+    # slice-local descending sort never loses or duplicates a block row
+    out = np.asarray(s.row_meta)[:, 0]
+    assert sorted(out.tolist()) == list(range(s.n_block_rows))
+    # real slots == distinct (block-row, tile-col) pairs; padding on top
+    nb = shape[1] // 8
+    keys = {(int(r) // 8) * nb + (int(q) // 8) for r, q in zip(rows, cols)}
+    assert s.real_slots == len(keys)
+    assert s.slot_total >= s.real_slots
+
+
+def test_sell_empty_rows_and_ragged_tail():
+    """Block rows with no nonzeros at all (and mb % C != 0) round-trip:
+    empty rows carry n_real = 0 and contribute only background."""
+    sr = PLUS_TIMES
+    shape = (80, 80)                       # mb = 10 with block 8 → C=4 ragged
+    rows = np.array([0, 3, 70, 70])        # block rows 0 and 8 only
+    cols = np.array([5, 64, 2, 79])
+    vals = np.array([2.0, 3.0, 5.0, 7.0], np.float32)
+    s = build_sell(rows, cols, vals, shape, sr, block=(8, 8), c=4)
+    np.testing.assert_array_equal(s.to_dense(sr),
+                                  _dense_oracle(rows, cols, vals, shape, sr))
+    meta = np.asarray(s.row_meta)
+    n_real = {int(o): int(k) for o, k in zip(meta[:, 0], meta[:, 2])}
+    assert n_real[0] == 2 and n_real[8] == 2
+    assert all(n_real[b] == 0 for b in range(10) if b not in (0, 8))
+
+
+def test_sell_single_hub_row():
+    """One hub block row holding every tile: the σ-window sort must put it
+    first in its slice and pad the quiet rows, not the hub."""
+    sr = PLUS_TIMES
+    n = 64
+    rows = np.full(32, 20)                 # all mass in block row 2
+    cols = np.arange(0, 64, 2)
+    vals = np.ones(32, np.float32)
+    s = build_sell(rows, cols, vals, (n, n), sr, block=(8, 8), c=4, sigma=8)
+    np.testing.assert_array_equal(s.to_dense(sr),
+                                  _dense_oracle(rows, cols, vals, (n, n), sr))
+    meta = np.asarray(s.row_meta)
+    assert meta[0, 0] == 2 and meta[0, 2] == 8   # hub sorted to slot 0
+    # the hub's slice is full-width for it alone; total padding stays
+    # bounded by (slice width) × (C-1) quiet rows
+    assert s.slot_total == 8 + 3 * 8 + 1 * 4     # hub slice + one pad slice
+
+
+def test_sell_sigma_smaller_than_c_rejected():
+    rows, cols, vals, shape = _family_coo("uniform", PLUS_TIMES)
+    with pytest.raises(ValueError):
+        build_sell(rows, cols, vals, shape, PLUS_TIMES, block=(8, 8),
+                   c=8, sigma=4)
+
+
+def test_autotune_sell_orders_by_stream_cost():
+    rows, cols, vals, shape = _family_coo("rmat", PLUS_TIMES)
+    s, report = autotune_sell(rows, cols, vals, shape, PLUS_TIMES,
+                              blocks=((8, 8), (16, 16)), cs=(2, 4),
+                              sigmas=(None, 8))
+    costs = [r["cost"] for r in report]
+    assert costs == sorted(costs) and len(report) == 8
+    best = report[0]
+    assert (s.block, s.slice_height) == (best["block"], best["c"])
+    assert s.slot_total == best["slot_total"]
+    # the winner still round-trips exactly
+    np.testing.assert_array_equal(
+        s.to_dense(PLUS_TIMES),
+        _dense_oracle(rows, cols, vals, shape, PLUS_TIMES))
+    # cost model self-consistency on the winner's own counts
+    mb = shape[0] // best["block"][0]
+    counts = np.zeros(mb, np.int64)
+    nb = shape[1] // best["block"][1]
+    for k in {(r // best["block"][0]) * nb + (q // best["block"][1])
+              for r, q in zip(rows.tolist(), cols.tolist())}:
+        counts[k // nb] += 1
+    again = sell_stream_cost(counts, best["block"], best["c"], best["sigma"])
+    assert again["cost"] == best["cost"]

@@ -174,6 +174,46 @@ def test_compare_bench_writes_github_step_summary(tmp_path, monkeypatch):
     assert "No timing regressions." in summary.read_text()
 
 
+def test_compare_bench_stale_module_gate(tmp_path):
+    """Baseline rows whose bench no driver module produces any more must
+    FAIL the gate (the ISSUE-9 bugfix) — a dump filtered with --only
+    would otherwise just stop checking them silently."""
+    import json
+    cb = _load("compare_bench")
+    run_py = tmp_path / "run.py"
+    run_py.write_text("MODULES = [\n    'table4_apps',\n    'roofline',\n]\n")
+    mods = cb.modules_in_driver(run_py)
+    assert mods == ["table4_apps", "roofline"]
+    base = [{"bench": "table4", "case": "c", "checksum": "aa"},
+            {"bench": "roofline", "case": "r", "checksum": "cc"},
+            {"bench": "ghost", "case": "g", "checksum": "bb"}]
+    # bench names match their module by prefix (table4 -> table4_apps)
+    assert cb.stale_benches(base, mods) == ["ghost"]
+    assert cb.stale_benches(base[:2], mods) == []
+    # end-to-end: exit 1 on a stale baseline even with every checksum equal
+    cur = tmp_path / "cur.json"
+    cur.write_text(json.dumps(base))
+    bl = tmp_path / "baseline.json"
+    bl.write_text(json.dumps({"rows": cb.reduce_rows(base)}))
+    assert cb.main([str(cur), "--baseline", str(bl),
+                    "--run-py", str(run_py)]) == 1
+    run_py.write_text(
+        "MODULES = ['table4_apps', 'roofline', 'ghost_bench']\n")
+    assert cb.main([str(cur), "--baseline", str(bl),
+                    "--run-py", str(run_py)]) == 0
+
+
+def test_compare_bench_committed_baseline_not_stale():
+    """Every bench in the committed baseline maps to a live module in
+    benchmarks/run.py MODULES (the CI gate, in-process)."""
+    import json
+    cb = _load("compare_bench")
+    rows = json.loads((TOOLS_DIR.parent / "benchmarks"
+                       / "baseline.json").read_text())["rows"]
+    assert rows, "empty committed baseline"
+    assert cb.stale_benches(rows, cb.modules_in_driver()) == []
+
+
 def test_bench_trajectory_diff():
     """diff: signed regression fractions on shared *_ms/*_per_s fields
     (``_per_s`` down = regression), plus row-membership changes."""

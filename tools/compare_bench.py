@@ -35,6 +35,7 @@ threshold is deliberately loose (1.5× default) because CI runners are
 from __future__ import annotations
 
 import argparse
+import ast
 import json
 import os
 import pathlib
@@ -42,6 +43,8 @@ import sys
 
 DEFAULT_BASELINE = pathlib.Path(__file__).resolve().parent.parent \
     / "benchmarks" / "baseline.json"
+DEFAULT_RUN = pathlib.Path(__file__).resolve().parent.parent \
+    / "benchmarks" / "run.py"
 
 
 def row_key(row: dict) -> tuple[str, str]:
@@ -73,6 +76,31 @@ def compare(current: list[dict], baseline: list[dict]) -> list[str]:
                 f"checksum changed: {key[0]},{key[1]}: "
                 f"{ref['checksum']} -> {got.get('checksum')}")
     return failures
+
+
+def modules_in_driver(run_py: pathlib.Path = DEFAULT_RUN) -> list[str]:
+    """The driver's MODULES list, read by **ast-parsing** benchmarks/run.py
+    (importing it would pull in jax and pin device flags)."""
+    tree = ast.parse(run_py.read_text())
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if getattr(tgt, "id", None) == "MODULES":
+                    return [ast.literal_eval(elt) for elt in node.value.elts]
+    raise ValueError(f"no MODULES list found in {run_py}")
+
+
+def stale_benches(baseline: list[dict], modules: list[str]) -> list[str]:
+    """Baseline bench names no driver module can produce any more.
+
+    Bench names are prefixes of their module name (``table4`` rows come
+    from ``table4_apps``).  A bench whose module left MODULES can never be
+    re-emitted, so its baseline rows are dead weight — and on a dump
+    produced with ``--only`` (as CI's bench-smoke is) they would simply
+    stop being checked rather than fail, hence the explicit gate."""
+    benches = sorted({str(r.get("bench", "")) for r in baseline})
+    return [b for b in benches
+            if not any(m == b or m.startswith(b) for m in modules)]
 
 
 def compare_timings(current: list[dict], trajectory: list[dict],
@@ -134,6 +162,8 @@ def main(argv: list[str] | None = None) -> int:
                          "compare timings against")
     ap.add_argument("--threshold", type=float, default=1.5,
                     help="relative slowdown tolerated before flagging")
+    ap.add_argument("--run-py", default=str(DEFAULT_RUN),
+                    help="driver whose MODULES list defines live benches")
     args = ap.parse_args(argv)
 
     current = json.loads(pathlib.Path(args.current).read_text())
@@ -166,6 +196,11 @@ def main(argv: list[str] | None = None) -> int:
         return 1
     baseline = json.loads(baseline_path.read_text())["rows"]
     failures = compare(current, baseline)
+    for b in stale_benches(baseline, modules_in_driver(pathlib.Path(args.run_py))):
+        failures.append(
+            f"stale baseline bench {b!r}: no module in benchmarks/run.py "
+            f"MODULES produces it — drop its rows (--update-baseline) or "
+            f"restore the module")
     for f in failures:
         print(f"compare_bench: FAIL {f}")
     known = {row_key(r) for r in baseline}
