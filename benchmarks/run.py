@@ -31,6 +31,7 @@ MODULES = [
     "table4_apps",
     "multi_query",
     "serving_load",
+    "slo_openloop",
     "analytics",
     "sensitivity_switch",
     "roofline",

@@ -1,0 +1,348 @@
+"""Open-loop SLO characterization of the async serving layer.
+
+Closed-loop clients (benchmarks/serving_load.py) self-throttle: a slow
+server slows its own offered load, so saturation sweeps can never show
+what overload does to tail latency and deadline misses.  This benchmark
+drives the paper's missing half — a seeded **Poisson arrival process**
+whose rate does not care how the server is doing — through
+:class:`~repro.serve.graph_engine.AsyncGraphServer` on a
+:class:`~repro.serve.scheduler.FakeClock`, at offered loads {0.5, 1.0,
+2.0}x the measured closed-loop capacity.
+
+Discrete-event simulation on the fake clock, with real compute:
+
+* arrivals are seeded exponential gaps at ``mult x capacity``; the
+  event loop advances the clock to ``min(next arrival, next window
+  due)`` and either admits the query (absolute deadline = its arrival
+  instant + one fixed latency budget) or polls the scheduler;
+* service consumes **simulated time equal to its measured wall time**
+  (the tenant's flush is timed with ``perf_counter`` and the fake clock
+  advances by exactly that much before tickets resolve), so backlog —
+  and therefore deadline misses — accumulate under overload exactly as
+  they would on a wall clock, while every scheduling decision stays
+  single-threaded and reproducible;
+* a request's latency is ``resolved_at - arrival`` on the simulated
+  timeline (queueing + batch formation + service).
+
+Asserted in-process, per load: the tenant's ``stats()["slo"]`` deadline
+misses equal the per-ticket slack oracle (misses counted exactly once),
+and every conservation invariant holds (``admitted == dispatched +
+pending + abandoned``, ``goodput + deadline_misses + no_deadline ==
+resolved``).  Across loads: miss rate is monotone non-decreasing with a
+strict 0.5x < 2.0x gap, and the answer checksums are **identical at
+every load** — overload degrades latency, never answers.  The same
+checksum gates in CI via benchmarks/baseline.json (the answers are
+timing-independent; every latency/miss-rate number is artifact data).
+
+The ``stitched`` case replays a two-window workload traced and
+untraced: payloads must be bit-identical, and every span the traced
+drain emits — ``serve/submit``/``serve/window``/``serve/flush``, the
+bucket pipeline's ``pipeline/*`` spans, enqueue waits — must carry the
+``window_id`` stitching attrs (obs.trace.Tracer.context), re-validated
+from the exported Perfetto JSON (``$SLO_TRACE_OUT``, default
+``slo-trace.json``).
+
+A machine-readable summary (offered-load curve + per-tenant SLO table)
+is written to ``$SLO_STATS_OUT`` (default ``slo-stats.json``) for
+tools/slo_report.py to render into ``$GITHUB_STEP_SUMMARY``.
+"""
+from benchmarks import common  # noqa: F401  (must be first: device count)
+
+import hashlib
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.graphs import generate
+from repro.obs import trace
+from repro.obs.metrics import percentile_exact
+from repro.serve.graph_engine import AsyncGraphServer, GraphQueryServer
+from repro.serve.scheduler import FakeClock
+
+ALGS = ("bfs", "sssp", "ppr")
+BATCH = 8
+LOADS = (0.5, 1.0, 2.0)
+#: checksummed payload field per algorithm (integer-exact answers only:
+#: bfs levels and sssp distances over content-keyed integer weights)
+CSUM_FIELD = {"bfs": "levels", "sssp": "dist"}
+
+
+def _csum(arrays) -> str:
+    h = hashlib.sha1()
+    for a in arrays:
+        a = np.asarray(a, np.float64)
+        h.update(np.where(np.isfinite(a), a, -1.0).astype(np.int64).tobytes())
+    return h.hexdigest()[:12]
+
+
+def _workload(graph, n: int, seed: int = 11):
+    rng = np.random.default_rng(seed)
+    return [(ALGS[int(a)], int(s))
+            for a, s in zip(rng.integers(0, len(ALGS), n),
+                            rng.integers(0, graph.n, n))]
+
+
+def _make_server(graph, max_wait: float):
+    """An async server on a fresh FakeClock whose tenant flush consumes
+    simulated time equal to its measured wall time — the discrete-event
+    bridge between real compute and the deterministic timeline.  Caching
+    is disabled (capacity 0) so every query costs real service time and
+    the capacity measurement transfers to the open-loop runs."""
+    clock = FakeClock()
+    srv = AsyncGraphServer(clock=clock, max_pending=1 << 16,
+                           cache_capacity=0)
+    srv.add_tenant("t", graph, batch_size=BATCH, max_wait=max_wait)
+    server = srv.tenant("t")
+    orig_flush = server.flush
+
+    def timed_flush():
+        t0 = time.perf_counter()
+        out = orig_flush()
+        clock.advance(time.perf_counter() - t0)
+        return out
+
+    server.flush = timed_flush
+    # compile warmup (deadline-less: lands in slo["no_deadline"], never
+    # skews the miss rate) — one query per algorithm primes every runner
+    for a in ALGS:
+        srv.submit("t", a, 0)
+    srv.drain("t")
+    return srv, clock
+
+
+def _capacity(graph, queries) -> float:
+    """Saturation capacity: the deep-backlog coalesced service rate.
+
+    Under open-loop overload the scheduler coalesces the backlog into
+    large windows, and the engine buckets a window per algorithm — so a
+    mixed-algorithm window of BATCH leaves its padded buckets ~1/3 full
+    while a backlogged window runs them full.  Stability is therefore
+    governed by the *coalesced* throughput, not the small-window one:
+    measure it by draining the whole workload as a single window (two
+    passes, best wall — the first warms residual compilation) on the
+    same server machinery the open-loop runs use."""
+    srv, _ = _make_server(graph, max_wait=1e9)
+    best = 0.0
+    for _ in range(2):
+        t0 = time.perf_counter()
+        for alg, src in queries:
+            srv.submit("t", alg, src)
+        srv.drain("t")
+        best = max(best, len(queries) / (time.perf_counter() - t0))
+    return best
+
+
+def _openloop(graph, queries, mult: float, capacity: float,
+              max_wait: float, budget: float, seed: int):
+    """One offered-load point: Poisson arrivals at ``mult x capacity``
+    through the windowed scheduler, every request's absolute deadline
+    pinned to its arrival + ``budget``."""
+    srv, clock = _make_server(graph, max_wait=max_wait)
+    rate = mult * capacity
+    rng = np.random.default_rng(seed)
+    # the warmup drain consumed simulated time (compilation is service
+    # too) — the arrival process starts from the post-warmup clock
+    arrivals = clock.now() + np.cumsum(
+        rng.exponential(1.0 / rate, len(queries)))
+    tickets = []
+    i, n = 0, len(queries)
+    sched = srv.scheduler
+    while i < n or sched.pending() > 0:
+        due = sched.next_wakeup()
+        if i < n and (due is None or arrivals[i] <= due):
+            now = clock.now()
+            if arrivals[i] > now:
+                clock.advance(arrivals[i] - now)
+            alg, src = queries[i]
+            # relative deadline vs *now*: under backlog the arrival is in
+            # the simulated past, so the absolute deadline stays pinned
+            # at arrival + budget (possibly already expired)
+            tickets.append(srv.submit(
+                "t", alg, src,
+                deadline=float(arrivals[i] + budget - clock.now())))
+            i += 1
+        else:
+            now = clock.now()
+            if due > now:
+                clock.advance(due - now)
+            srv.poll()       # flush advances the clock by its wall time
+
+    lat = np.array([tk.resolved_at - a for tk, a in zip(tickets, arrivals)])
+    st = srv.stats("t")
+    slo = st["slo"]
+    # -- accounting invariants, asserted on the real run ------------------
+    assert slo["pending"] == 0 and slo["abandoned"] == 0
+    assert slo["admitted"] == slo["dispatched"] + slo["pending"] \
+        + slo["abandoned"]
+    assert slo["goodput"] + slo["deadline_misses"] + slo["no_deadline"] \
+        == slo["resolved"] == slo["dispatched"]
+    assert slo["no_deadline"] == len(ALGS)          # exactly the warmups
+    assert slo["slack_s"]["count"] == slo["goodput"] \
+        + slo["deadline_misses"] == n
+    # misses counted exactly once, equal to the per-ticket slack oracle
+    oracle = sum(1 for tk in tickets if tk.slack() < 0)
+    assert slo["deadline_misses"] == oracle, (slo["deadline_misses"], oracle)
+    assert slo["lateness_s"]["count"] == oracle
+
+    miss_rate = slo["deadline_misses"] / n
+    payloads = [tk.result for tk in tickets]
+    csum = _csum([payloads[j][CSUM_FIELD[alg]]
+                  for j, (alg, _) in enumerate(queries)
+                  if alg in CSUM_FIELD])
+    return {"offered_x": mult, "offered_qps": rate, "n": n,
+            "p50_ms": percentile_exact(list(lat), 0.50) * 1e3,
+            "p99_ms": percentile_exact(list(lat), 0.99) * 1e3,
+            "miss_rate": miss_rate, "goodput_rate": slo["goodput"] / n,
+            "misses": slo["deadline_misses"],
+            "abandoned": slo["abandoned"], "checksum": csum,
+            "slo": slo, "tickets": tickets, "payloads": payloads}
+
+
+# ------------------------------------------------------------- stitching
+def _replay_two_windows(graph, queries):
+    """Submit ``queries`` as two size-BATCH windows and drain each —
+    returns (payloads, window_ids)."""
+    srv, _ = _make_server(graph, max_wait=1e9)
+    payloads, wids = [], []
+    for lo in range(0, len(queries), BATCH):
+        tks = [srv.submit("t", alg, src)
+               for alg, src in queries[lo:lo + BATCH]]
+        srv.drain("t")
+        payloads.extend(tk.result for tk in tks)
+        wids.extend(tk.window_id for tk in tks)
+    return payloads, wids
+
+
+def _stitched_trace(graph, queries):
+    """Traced == untraced bit-identity with stitched spans enabled, and
+    every span of the traced drain carries the window_id attrs — in the
+    live tracer and re-validated from the Perfetto export."""
+    ref, _ = _replay_two_windows(graph, queries)
+    tr = trace.Tracer()
+    with trace.tracing(tr):
+        got, wids = _replay_two_windows(graph, queries)
+
+    for r, g in zip(ref, got):          # bit-identity, every field
+        assert sorted(r) == sorted(g)
+        for k in r:
+            np.testing.assert_array_equal(np.asarray(r[k]),
+                                          np.asarray(g[k]))
+
+    # the traced replay also traces the warmup window, so span counts
+    # are filtered to the measured windows' ids
+    windows = sorted(set(wids))
+    assert len(windows) == (len(queries) + BATCH - 1) // BATCH
+    submits = [s for s in tr.filter("serve/submit")
+               if s.attrs["window_id"] in windows]
+    assert len(submits) == len(queries)
+    assert all(s.attrs["request_id"] for s in submits)
+    assert len([s for s in tr.filter("serve/window")
+                if s.attrs["window_id"] in windows]) == len(queries)
+    flushes = [s for s in tr.filter("serve/flush")
+               if s.attrs.get("window_id") in windows]
+    assert len(flushes) == len(windows)
+    # every span any drain emitted — flush, enqueue waits, the bucket
+    # pipeline's issue/materialize, bucket compute/payload — inherited
+    # the ambient window_id/request_ids, and every measured window shows
+    # up stitched
+    stitched = [s for s in tr.spans
+                if s.name.startswith(("pipeline/", "serve/bucket",
+                                      "serve/payload", "serve/enqueue",
+                                      "serve/flush"))]
+    assert stitched, "drain emitted no downstream spans"
+    for s in stitched:
+        assert "window_id" in s.attrs, (s.name, s.attrs)
+        assert "request_ids" in s.attrs, s.name
+    assert {s.attrs["window_id"] for s in stitched} >= set(windows)
+
+    out = os.environ.get("SLO_TRACE_OUT", "slo-trace.json")
+    n_events = tr.export_chrome_trace(out)
+    with open(out) as fh:
+        doc = json.load(fh)
+    assert len(doc["traceEvents"]) == n_events
+    for ev in doc["traceEvents"]:
+        if ev["name"].startswith(("serve/", "pipeline/")):
+            assert "window_id" in ev["args"], ev["name"]
+    csum = _csum([got[j][CSUM_FIELD[alg]]
+                  for j, (alg, _) in enumerate(queries)
+                  if alg in CSUM_FIELD])
+    emit("slo_openloop", "stitched", n_spans=n_events,
+         n_windows=len(windows), n_queries=len(queries), checksum=csum)
+
+
+def run(quick: bool = False):
+    graph = generate("face", scale=0.12, seed=5)
+    n = 120 if quick else 240
+    queries = _workload(graph, n)
+    capacity = _capacity(graph, queries[: max(BATCH * 6, n // 2)])
+    emit("slo_openloop", "capacity", queries_per_s=capacity)
+    # one full batch gathers in 16 query-service-times at 0.5x offered
+    # load; the budget leaves ~2x headroom over the 0.5x steady-state
+    # latency (window fill + partially-filled-bucket service), while a
+    # 2x run's backlog grows past it within the workload — capacity is
+    # the saturation rate, so 2x is structurally unsustainable
+    t_q = 1.0 / capacity
+    max_wait = 16 * t_q
+    budget = 64 * t_q
+
+    by_mult = {}
+    for mult in LOADS:
+        m = _openloop(graph, queries, mult, capacity, max_wait, budget,
+                      seed=int(mult * 100))
+        by_mult[mult] = m
+        emit("slo_openloop", f"load{mult:g}x",
+             **{k: v for k, v in m.items()
+                if k not in ("slo", "tickets", "payloads")})
+
+    # overload degrades deadlines monotonically — and never answers
+    mr = {m: by_mult[m]["miss_rate"] for m in LOADS}
+    assert mr[0.5] <= mr[1.0] + 0.1, mr
+    assert mr[1.0] <= mr[2.0] + 0.1, mr
+    assert mr[2.0] >= mr[0.5] + 0.15, mr
+    csums = {by_mult[m]["checksum"] for m in LOADS}
+    assert len(csums) == 1, csums
+
+    # async == sync oracle on the same workload, element-exact
+    ssrv = GraphQueryServer(graph, batch_size=BATCH)
+    reqs = [ssrv.submit(alg, src) for alg, src in queries]
+    ssrv.flush()
+    field = {"bfs": "levels", "sssp": "dist", "ppr": "rank"}
+    for tk, rq, (alg, _) in zip(by_mult[1.0]["tickets"], reqs, queries):
+        np.testing.assert_array_equal(
+            np.asarray(tk.result[field[alg]]),
+            np.asarray(rq.result[field[alg]]),
+            err_msg=f"async != sync for {alg}")
+    emit("slo_openloop", "oracle", n=n, checksum=csums.pop())
+
+    _stitched_trace(graph, queries[: 2 * BATCH])
+
+    stats_out = os.environ.get("SLO_STATS_OUT", "slo-stats.json")
+    doc = {
+        "bench": "slo_openloop",
+        "capacity_qps": capacity,
+        "budget_ms": budget * 1e3,
+        "curve": [{k: by_mult[m][k]
+                   for k in ("offered_x", "offered_qps", "n", "p50_ms",
+                             "p99_ms", "miss_rate", "goodput_rate",
+                             "misses", "abandoned")}
+                  for m in LOADS],
+        "tenants": [{"tenant": "t", "case": f"load{m:g}x",
+                     **{k: v for k, v in by_mult[m]["slo"].items()
+                        if not isinstance(v, dict)},
+                     "worst_slack_ms":
+                         by_mult[m]["slo"]["slack_s"].get("min", 0.0) * 1e3}
+                    for m in LOADS],
+    }
+    with open(stats_out, "w") as fh:
+        json.dump(doc, fh, indent=2, default=float)
+    print(f"slo_openloop: wrote SLO summary to {stats_out}")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(quick=ap.parse_args().quick)

@@ -26,6 +26,17 @@ Design constraints, in order:
 3. **Spans are data.**  A span is (name, t0, t1, attrs); retrospective
    intervals (e.g. a request's enqueue wait, known only at flush time)
    are first-class via :meth:`Tracer.add_span`.
+4. **Stitching is ambient.**  :meth:`Tracer.context` opens a
+   thread-local block of ambient attributes: every span recorded on
+   that thread while the block is open — from any instrumentation site,
+   however deep in the call stack — inherits them (explicit attrs win).
+   The serving layer uses it to stamp ``window_id``/``request_ids``
+   onto the phase/pipeline spans a window's flush emits, stitching one
+   request lifecycle from ``serve/submit`` down to the kernels without
+   threading ids through every call signature.  Thread-local, so
+   concurrent tenant flushes never cross-contaminate; nothing changes
+   while tracing is disabled (ambient merging happens inside
+   ``_record``, which only runs with a tracer installed).
 
 Install/uninstall is explicit and process-global (:func:`install` /
 :func:`uninstall`, or the :func:`tracing` context manager); thread-safe
@@ -103,12 +114,36 @@ class _LiveSpan:
         return self
 
 
+class _AmbientContext:
+    """One entry on a tracer's thread-local ambient-attrs stack (see
+    :meth:`Tracer.context`)."""
+
+    __slots__ = ("_tracer", "_attrs")
+
+    def __init__(self, tracer: "Tracer", attrs: Dict[str, Any]):
+        self._tracer = tracer
+        self._attrs = attrs
+
+    def __enter__(self) -> "_AmbientContext":
+        tl = self._tracer._ambient
+        stack = getattr(tl, "stack", None)
+        if stack is None:
+            stack = tl.stack = []
+        stack.append(self._attrs)
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self._tracer._ambient.stack.pop()
+        return False
+
+
 class Tracer:
     """A process-local span collector with a Chrome-trace exporter."""
 
     def __init__(self):
         self.spans: List[Span] = []
         self._lock = threading.Lock()
+        self._ambient = threading.local()
         self.epoch = time.perf_counter()   # ts origin for the export
 
     # -- recording ------------------------------------------------------
@@ -123,7 +158,28 @@ class Tracer:
         self._record(s)
         return s
 
+    def context(self, **attrs) -> _AmbientContext:
+        """Thread-local ambient attributes for a block: every span this
+        thread records while the block is open inherits ``attrs``
+        (explicit span attrs win on clashes; nested contexts merge,
+        inner-most winning).  Other threads are unaffected — concurrent
+        tenant flushes each stitch their own ``window_id``."""
+        return _AmbientContext(self, attrs)
+
+    def _ambient_attrs(self) -> Optional[Dict[str, Any]]:
+        stack = getattr(self._ambient, "stack", None)
+        if not stack:
+            return None
+        merged: Dict[str, Any] = {}
+        for frame in stack:
+            merged.update(frame)
+        return merged
+
     def _record(self, span: Span) -> None:
+        ambient = self._ambient_attrs()
+        if ambient:
+            for k, v in ambient.items():
+                span.attrs.setdefault(k, v)
         with self._lock:
             self.spans.append(span)
 

@@ -93,7 +93,7 @@ from repro.graphs.ppr import pagerank
 from repro.obs import trace
 from repro.obs.metrics import MetricsRegistry
 from repro.serve.scheduler import (
-    BackpressureError, QueryTicket, SystemClock, WindowScheduler,
+    BackpressureError, QueryTicket, SLOAccount, SystemClock, WindowScheduler,
 )
 
 ALGORITHMS = ("bfs", "sssp", "ppr")
@@ -741,6 +741,11 @@ class AsyncGraphServer:
     * ``mutate()`` drains the tenant's pending window first — exactly
       the synchronous server's queued-requests-see-the-old-snapshot
       contract, lifted to the async queue.
+    * every first resolve is judged against its ticket's deadline into a
+      per-tenant :class:`~repro.serve.scheduler.SLOAccount`:
+      ``stats(tenant)["slo"]`` carries goodput / deadline_misses /
+      abandoned plus signed slack histograms, with snapshot-exact
+      conservation invariants (see :meth:`stats`).
 
     Run it threaded (``start()``/``close()``, real clock) for serving
     and benchmarks, or single-threaded on a
@@ -761,6 +766,7 @@ class AsyncGraphServer:
             default_max_wait=max_wait)
         self._tenants: Dict[str, GraphQueryServer] = {}
         self._tenant_locks: Dict[str, threading.Lock] = {}
+        self._slo: Dict[str, SLOAccount] = {}
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
 
@@ -781,6 +787,7 @@ class AsyncGraphServer:
                                 max_wait=max_wait)
         self._tenants[name] = server
         self._tenant_locks[name] = threading.Lock()
+        self._slo[name] = SLOAccount()
         return server
 
     def tenant(self, name: str) -> GraphQueryServer:
@@ -796,22 +803,36 @@ class AsyncGraphServer:
         """Admit one query for ``tenant`` and return its ticket.
 
         ``deadline`` is a relative latency budget in seconds — it pulls
-        the window flush earlier and orders dispatch (EDF); it never
-        drops admitted work.  ``priority`` breaks deadline ties (higher
-        first).  Raises ValueError on an unservable query and
+        the window flush earlier, orders dispatch (EDF), and is the SLO
+        the resolve is judged against (``stats(tenant)["slo"]``); it
+        never drops admitted work.  ``priority`` breaks deadline ties
+        (higher first).  Raises ValueError on an unservable query and
         :class:`BackpressureError` when the queue is saturated (counted
-        in ``stats(tenant)["latency"]["rejected"]``)."""
+        in ``stats(tenant)["latency"]["rejected"]``).
+
+        With a tracer installed, admission emits a ``serve/submit`` span
+        carrying the ticket's ``request_id``/``window_id`` — the top of
+        the stitched request lifecycle."""
         server = self.tenant(tenant)
         algorithm, src = server.validate_request(algorithm, source)
         abs_deadline = (None if deadline is None
                         else self.clock.now() + deadline)
         ticket = QueryTicket(tenant, algorithm, src, priority=priority,
                              deadline=abs_deadline)
+        tr = trace.active()
+        t0 = time.perf_counter() if tr is not None else 0.0
         try:
             self.scheduler.submit(ticket)
         except BackpressureError:
             server.metrics.counter("rejected").inc()
             raise
+        if tr is not None:
+            ticket.submitted_pc = t0
+            tr.add_span("serve/submit", t0, time.perf_counter(),
+                        tenant=tenant, algorithm=algorithm,
+                        request_id=ticket.request_id,
+                        window_id=ticket.window_id,
+                        deadline=abs_deadline)
         return ticket
 
     # ----------------------------------------------------------- executor
@@ -819,23 +840,58 @@ class AsyncGraphServer:
         """Scheduler executor: resolve one tenant window (already in EDF
         order) through its synchronous server. The per-tenant lock keeps
         the non-reentrant engine safe while other tenants' windows — and
-        other tenants' mutations — proceed concurrently."""
+        other tenants' mutations — proceed concurrently.
+
+        With a tracer installed, each ticket gets a retrospective
+        ``serve/window`` span (its submit stamp → dispatch) and the
+        whole drain runs inside an ambient ``window_id``/``tenant``/
+        ``request_ids`` context (obs.trace.Tracer.context) — every span
+        the flush emits below here (``serve/flush``, bucket pipeline,
+        phase closures) inherits the ids, stitching the lifecycle."""
         server = self._tenants[name]
+        slo = self._slo[name]
+        tr = trace.active()
         with self._tenant_locks[name]:
-            reg = server.metrics
-            now = self.clock.now()
-            wait_h = reg.histogram("time_in_queue_s")
-            occ_h = reg.histogram("window_occupancy", least=1e-3)
-            occ_h.observe(len(tickets) / server.batch_size)
-            reqs = []
+            if tr is None or not tickets:
+                self._drain_window(server, slo, tickets)
+                return
+            wid = tickets[0].window_id
+            now_pc = time.perf_counter()
             for tk in tickets:
-                wait_h.observe(max(0.0, now - tk.admitted_at))
-                reqs.append(server.submit(
-                    tk.algorithm,
-                    None if tk.source == GLOBAL else tk.source))
-            server.flush()
-            for tk, req in zip(tickets, reqs):
-                tk.resolve(req.result, cached=req.cached)
+                if tk.submitted_pc:
+                    tr.add_span("serve/window", tk.submitted_pc, now_pc,
+                                tenant=name, request_id=tk.request_id,
+                                window_id=tk.window_id,
+                                algorithm=tk.algorithm)
+            rids = ",".join(tk.request_id for tk in tickets)
+            with tr.context(window_id=wid, tenant=name, request_ids=rids):
+                self._drain_window(server, slo, tickets)
+
+    def _drain_window(self, server: GraphQueryServer, slo: SLOAccount,
+                      tickets: List[QueryTicket]) -> None:
+        """The drain body (tenant lock held): observe queue metrics,
+        submit + flush through the synchronous server, resolve tickets
+        and record each **first** resolve into the tenant's SLO account
+        (re-resolution is a no-op, so a double drain can never double-
+        count a goodput or a miss)."""
+        reg = server.metrics
+        now = self.clock.now()
+        wait_h = reg.histogram("time_in_queue_s")
+        occ_h = reg.histogram("window_occupancy", least=1e-3)
+        occ_h.observe(len(tickets) / server.batch_size)
+        reqs = []
+        for tk in tickets:
+            wait_h.observe(max(0.0, now - tk.admitted_at))
+            reqs.append(server.submit(
+                tk.algorithm,
+                None if tk.source == GLOBAL else tk.source))
+        server.flush()
+        resolved_at = self.clock.now()
+        for tk, req in zip(tickets, reqs):
+            fresh = not tk.done()
+            tk.resolve(req.result, cached=req.cached, at=resolved_at)
+            if fresh:
+                slo.record(tk)
 
     # --------------------------------------------------------- scheduling
     def poll(self) -> int:
@@ -860,9 +916,29 @@ class AsyncGraphServer:
         """One tenant's coherent snapshot: the synchronous server's
         stats() (latency section now carrying the async instruments —
         time_in_queue_s, window_occupancy, rejected) plus the scheduler's
-        admission/dispatch accounting under ``"scheduler"``."""
-        st = self.tenant(tenant).stats()
-        st["scheduler"] = self.scheduler.stats()
+        admission/dispatch accounting under ``"scheduler"`` and the
+        tenant's SLO truth under ``"slo"``.
+
+        ``"slo"`` merges the scheduler's per-tenant lifecycle counters
+        (admitted / dispatched / pending / abandoned / wait_timeouts)
+        with the SLO account (resolved / goodput / deadline_misses /
+        no_deadline + signed ``slack_s`` and ``lateness_s`` histogram
+        summaries).  Conservation holds in **every** snapshot, threaded
+        serving included::
+
+            admitted == dispatched + pending + abandoned
+            goodput + deadline_misses + no_deadline == resolved
+            resolved <= dispatched
+
+        The last inequality is guaranteed by read order: the SLO account
+        is snapshotted *before* the scheduler (a request is dispatched
+        before it resolves, so reading resolutions first can only
+        undercount them relative to dispatches)."""
+        server = self.tenant(tenant)
+        slo = self._slo[tenant].snapshot()
+        st = server.stats()
+        st["scheduler"] = sched = self.scheduler.stats()
+        st["slo"] = {**sched["tenants"][tenant], **slo}
         return st
 
     # ----------------------------------------------------------- threaded

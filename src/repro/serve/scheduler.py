@@ -42,7 +42,19 @@ Invariants the tests pin (tests/test_scheduler_props.py):
   window's expiry and the scheduler is polled;
 * queued depth never exceeds ``max_pending``; over-bound submissions
   raise :class:`BackpressureError` and are counted, never lost;
-* every admitted ticket is dispatched exactly once (conservation).
+* every admitted ticket is dispatched exactly once — or abandoned by a
+  timed-out waiter — never both (conservation:
+  ``admitted == dispatched + pending + abandoned`` per tenant, in every
+  ``stats()`` snapshot).
+
+SLO accounting (tests/test_async_server.py): every ticket carries a
+``request_id`` and the window it was batched into (``window_id``), plus
+its full timeline — admitted → dispatched → resolved — on the
+scheduler's clock.  :class:`SLOAccount` classifies resolved tickets
+against their deadline (``slack = deadline - resolved_at``; >= 0 is
+goodput, < 0 a deadline miss) into per-tenant counters and signed slack
+histograms; :class:`~repro.serve.graph_engine.AsyncGraphServer` owns one
+account per tenant and surfaces it as ``stats(tenant)["slo"]``.
 """
 from __future__ import annotations
 
@@ -51,6 +63,8 @@ import math
 import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.obs.metrics import Histogram
 
 
 class SystemClock:
@@ -102,16 +116,24 @@ class BackpressureError(RuntimeError):
 class QueryTicket:
     """One admitted (or to-be-admitted) query's handle.
 
-    The scheduler stamps ``admitted_at``/``seq`` at admission and
-    ``dispatched_at`` when the query's window flushes; the executor
-    resolves it with the result payload.  ``resolve()`` on an
-    already-resolved ticket is a no-op that returns the cached payload —
-    a ticket can never be clobbered by a duplicate drain.
+    The scheduler stamps the admission half of the timeline —
+    ``admitted_at``/``seq``/``request_id`` plus the ``window_id`` of the
+    window the ticket was batched into — and ``dispatched_at`` when that
+    window flushes; the executor resolves it with the result payload,
+    stamping ``resolved_at``.  ``resolve()`` on an already-resolved
+    ticket is a no-op that returns the cached payload — a ticket can
+    never be clobbered by a duplicate drain.
+
+    A waiter that gives up (``wait()`` timeout) reports back to the
+    scheduler: a still-queued ticket is pulled from its window and
+    counted ``abandoned`` (so conservation stays checkable), a ticket
+    already in dispatch only counts the timeout and will still resolve.
     """
 
     __slots__ = ("tenant", "algorithm", "source", "priority", "deadline",
-                 "admitted_at", "dispatched_at", "seq", "result", "cached",
-                 "_event")
+                 "admitted_at", "dispatched_at", "resolved_at", "seq",
+                 "request_id", "window_id", "submitted_pc", "abandoned",
+                 "result", "cached", "_event", "_sched", "_timed_out")
 
     def __init__(self, tenant: str, algorithm: str = "", source: int = -1,
                  priority: int = 0, deadline: Optional[float] = None):
@@ -122,35 +144,131 @@ class QueryTicket:
         self.deadline = deadline
         self.admitted_at = 0.0
         self.dispatched_at = 0.0
+        self.resolved_at = 0.0
         self.seq = -1
+        self.request_id = ""
+        self.window_id = -1
+        # perf_counter stamp set by the tracing submit path — the t0 of
+        # the retrospective serve/window span (0.0 = tracing disabled).
+        self.submitted_pc = 0.0
+        self.abandoned = False
         self.result: Optional[Dict[str, Any]] = None
         self.cached = False
         self._event = threading.Event()
+        self._sched: Optional["WindowScheduler"] = None
+        self._timed_out = False
 
     def done(self) -> bool:
         return self._event.is_set()
 
     def resolve(self, payload: Optional[Dict[str, Any]],
-                cached: bool = False) -> Optional[Dict[str, Any]]:
+                cached: bool = False,
+                at: Optional[float] = None) -> Optional[Dict[str, Any]]:
         """Attach the result and wake waiters. Re-resolution is a no-op
-        returning the already-cached payload (never overwrites)."""
+        returning the already-cached payload (never overwrites — and
+        never re-stamps ``resolved_at``).  ``at`` is the resolve instant
+        on the scheduler's clock (slack is measured against it)."""
         if self._event.is_set():
             return self.result
         self.result = payload
         self.cached = cached
+        self.resolved_at = self.dispatched_at if at is None else at
         self._event.set()
         return payload
+
+    def slack(self) -> Optional[float]:
+        """Seconds of deadline margin at resolve time: positive = met,
+        negative = missed.  None while unresolved or without a deadline."""
+        if self.deadline is None or not self._event.is_set():
+            return None
+        return self.deadline - self.resolved_at
+
+    def timeline(self) -> Dict[str, Any]:
+        """The request lifecycle as one dict (scheduler-clock instants)."""
+        return {"request_id": self.request_id, "tenant": self.tenant,
+                "window_id": self.window_id,
+                "admitted_at": self.admitted_at,
+                "dispatched_at": self.dispatched_at,
+                "resolved_at": self.resolved_at,
+                "deadline": self.deadline, "abandoned": self.abandoned}
 
     def wait(self, timeout: Optional[float] = None) -> Dict[str, Any]:
         """Block until resolved (threaded serving) and return the payload.
         On a fake clock nothing resolves tickets in the background —
-        drive the scheduler (``poll()``/``drain()``) first."""
+        drive the scheduler (``poll()``/``drain()``) first.
+
+        A timeout abandons the ticket: the scheduler counts it per
+        tenant (``wait_timeouts``; ``abandoned`` too when it was still
+        queued, in which case it leaves the window and will never
+        dispatch) before the TimeoutError is raised."""
         if not self._event.wait(timeout):
+            if self._sched is not None:
+                self._sched._on_wait_timeout(self)
             raise TimeoutError(
                 f"ticket ({self.tenant}/{self.algorithm}/{self.source}) "
                 f"unresolved after {timeout}s — is the event loop running?")
         assert self.result is not None
         return self.result
+
+
+class SLOAccount:
+    """Per-tenant SLO truth over resolved requests.
+
+    ``record(ticket)`` classifies one freshly resolved ticket by its
+    signed slack (``deadline - resolved_at`` on the scheduler clock):
+    slack >= 0 counts toward ``goodput``, slack < 0 is a
+    ``deadline_miss``; deadline-less requests land in ``no_deadline``.
+    The signed slack is observed into the ``slack_s`` histogram
+    (negative values share the lowest bucket; the exact ``min`` is the
+    worst slack seen) and each miss's positive lateness additionally
+    into ``lateness_s``.  The caller records each request exactly once
+    (``QueryTicket.resolve`` re-resolution is a no-op, so "first
+    resolve" is well-defined even under duplicate drains).
+
+    One lock guards the counters *and* both histograms, so conservation
+    holds in **every** ``snapshot()``, never just at quiescence::
+
+        goodput + deadline_misses + no_deadline == resolved
+        slack_s["count"] == goodput + deadline_misses
+        lateness_s["count"] == deadline_misses
+    """
+
+    __slots__ = ("_lock", "resolved", "goodput", "deadline_misses",
+                 "no_deadline", "slack_s", "lateness_s")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.resolved = 0
+        self.goodput = 0
+        self.deadline_misses = 0
+        self.no_deadline = 0
+        self.slack_s = Histogram("slack_s")
+        self.lateness_s = Histogram("lateness_s")
+
+    def record(self, ticket: QueryTicket) -> Optional[float]:
+        """Classify one resolved ticket; returns its signed slack."""
+        slack = ticket.slack()
+        with self._lock:
+            self.resolved += 1
+            if slack is None:
+                self.no_deadline += 1
+            else:
+                if slack >= 0:
+                    self.goodput += 1
+                else:
+                    self.deadline_misses += 1
+                    self.lateness_s.observe(-slack)
+                self.slack_s.observe(slack)
+        return slack
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Plain-dict copy (counters + histogram summaries)."""
+        with self._lock:
+            return {"resolved": self.resolved, "goodput": self.goodput,
+                    "deadline_misses": self.deadline_misses,
+                    "no_deadline": self.no_deadline,
+                    "slack_s": self.slack_s.summary(),
+                    "lateness_s": self.lateness_s.summary()}
 
 
 def _edf_key(tk: QueryTicket) -> Tuple[float, int, int]:
@@ -161,10 +279,17 @@ def _edf_key(tk: QueryTicket) -> Tuple[float, int, int]:
 
 
 class _TenantQueue:
-    """One tenant's open window: the queued tickets and when the window
-    opened (first pending ticket's admission time)."""
+    """One tenant's open window — the queued tickets, when the window
+    opened (first pending ticket's admission time), its id — plus the
+    tenant's lifetime accounting.  Per-tenant conservation, guaranteed
+    in every locked snapshot::
 
-    __slots__ = ("name", "batch_size", "max_wait", "tickets", "opened_at")
+        admitted == dispatched + len(tickets) + abandoned
+    """
+
+    __slots__ = ("name", "batch_size", "max_wait", "tickets", "opened_at",
+                 "window_id", "admitted", "dispatched", "abandoned",
+                 "wait_timeouts")
 
     def __init__(self, name: str, batch_size: int, max_wait: float):
         self.name = name
@@ -172,6 +297,11 @@ class _TenantQueue:
         self.max_wait = max_wait
         self.tickets: List[QueryTicket] = []
         self.opened_at = 0.0
+        self.window_id = -1
+        self.admitted = 0
+        self.dispatched = 0
+        self.abandoned = 0
+        self.wait_timeouts = 0
 
 
 class WindowScheduler:
@@ -202,10 +332,12 @@ class WindowScheduler:
         self._cond = threading.Condition()
         self._tenants: Dict[str, _TenantQueue] = {}
         self._seq = itertools.count()
+        self._window_seq = itertools.count()
         self._pending = 0
         self.admitted = 0
         self.rejected = 0
         self.dispatched = 0
+        self.abandoned = 0
         self.depth_high_water = 0
 
     # ------------------------------------------------------------- setup
@@ -238,11 +370,16 @@ class WindowScheduler:
             now = self.clock.now()
             ticket.admitted_at = now
             ticket.seq = next(self._seq)
+            ticket.request_id = f"r{ticket.seq}"
+            ticket._sched = self
             if not tq.tickets:
                 tq.opened_at = now
+                tq.window_id = next(self._window_seq)
+            ticket.window_id = tq.window_id
             tq.tickets.append(ticket)
             self._pending += 1
             self.admitted += 1
+            tq.admitted += 1
             self.depth_high_water = max(self.depth_high_water, self._pending)
             self._cond.notify_all()
         return ticket
@@ -270,10 +407,16 @@ class WindowScheduler:
         return min(dues) if dues else None
 
     def _take(self, tq: _TenantQueue, now: float) -> List[QueryTicket]:
-        """Pop a window's tickets in EDF dispatch order (lock held)."""
+        """Pop a window's tickets in EDF dispatch order (lock held).
+        The per-tenant ``dispatched`` counter moves here — inside the
+        lock, atomically with the pending decrement — so per-tenant
+        conservation holds in every snapshot, not just after the
+        executor returns (the global ``dispatched`` keeps its
+        post-executor semantics)."""
         tickets = sorted(tq.tickets, key=_edf_key)
         tq.tickets = []
         self._pending -= len(tickets)
+        tq.dispatched += len(tickets)
         for tk in tickets:
             tk.dispatched_at = now
         return tickets
@@ -311,6 +454,34 @@ class WindowScheduler:
                        for tq in tqs if tq.tickets]
         return self._run(batches)
 
+    # ------------------------------------------------------- abandonment
+    def _on_wait_timeout(self, ticket: QueryTicket) -> bool:
+        """A waiter gave up on ``ticket`` (``QueryTicket.wait`` timeout).
+
+        The timeout is counted once per ticket (``wait_timeouts``); a
+        ticket still sitting in its window is additionally pulled out
+        and counted ``abandoned`` (per tenant and globally) so it never
+        dispatches and ``admitted == dispatched + pending + abandoned``
+        stays exact.  A ticket that already left the window (dispatched,
+        or mid-dispatch on another thread) is left alone — its executor
+        will still resolve it.  Returns True when the ticket was
+        abandoned before dispatch."""
+        with self._cond:
+            tq = self._tenants.get(ticket.tenant)
+            if tq is None:
+                return False
+            if not ticket._timed_out:
+                ticket._timed_out = True
+                tq.wait_timeouts += 1
+            if ticket in tq.tickets:
+                tq.tickets.remove(ticket)
+                self._pending -= 1
+                tq.abandoned += 1
+                self.abandoned += 1
+                ticket.abandoned = True
+                return True
+        return False
+
     def pending(self, tenant: Optional[str] = None) -> int:
         with self._cond:
             if tenant is not None:
@@ -323,12 +494,25 @@ class WindowScheduler:
             self._cond.notify_all()
 
     def stats(self) -> Dict[str, Any]:
+        """One locked snapshot.  Global counters keep their original
+        semantics (``dispatched`` moves after the executor returns); the
+        per-tenant section under ``"tenants"`` is snapshot-exact —
+        ``admitted == dispatched + pending + abandoned`` holds for every
+        tenant in every snapshot (dispatched moves at window pop)."""
         with self._cond:
             return {"admitted": self.admitted, "rejected": self.rejected,
                     "dispatched": self.dispatched, "pending": self._pending,
+                    "abandoned": self.abandoned,
                     "max_pending": self.max_pending,
                     "depth_high_water": self.depth_high_water,
                     "windows": {n: len(tq.tickets)
+                                for n, tq in self._tenants.items()},
+                    "tenants": {n: {"admitted": tq.admitted,
+                                    "dispatched": tq.dispatched,
+                                    "pending": len(tq.tickets),
+                                    "abandoned": tq.abandoned,
+                                    "wait_timeouts": tq.wait_timeouts,
+                                    "window_id": tq.window_id}
                                 for n, tq in self._tenants.items()}}
 
     # ---------------------------------------------------------- threaded

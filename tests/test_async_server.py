@@ -373,6 +373,92 @@ def test_ticket_wait_times_out_unresolved():
 
 
 # ---------------------------------------------------------------------------
+# SLO accounting: deadline misses, slack, abandonment (fake clock)
+# ---------------------------------------------------------------------------
+
+def test_slo_deadline_miss_accounting(graph):
+    """Misses are classified by signed slack at resolve time, counted
+    exactly once, and conserved: goodput + misses + no-deadline ==
+    resolved in every stats() snapshot."""
+    clock = FakeClock()
+    srv = AsyncGraphServer(clock=clock, max_wait=0.05)
+    srv.add_tenant("t", graph, batch_size=8)
+    hit = srv.submit("t", "bfs", 0, deadline=10.0)
+    miss = srv.submit("t", "bfs", 1, deadline=0.01)
+    free = srv.submit("t", "bfs", 2)                # no deadline
+    clock.advance(0.06)                             # past window + deadline
+    assert srv.poll() == 3
+
+    # slack sign convention: resolved after the deadline is negative
+    assert hit.slack() == pytest.approx(10.0 - 0.06)
+    assert miss.slack() == pytest.approx(0.01 - 0.06)
+    assert free.slack() is None
+
+    slo = srv.stats("t")["slo"]
+    assert slo["resolved"] == 3
+    assert (slo["goodput"], slo["deadline_misses"], slo["no_deadline"]) \
+        == (1, 1, 1)
+    assert slo["goodput"] + slo["deadline_misses"] + slo["no_deadline"] \
+        == slo["resolved"] == slo["dispatched"]
+    assert slo["admitted"] == slo["dispatched"] + slo["pending"] \
+        + slo["abandoned"]
+    # the slack histogram saw both deadlined tickets (signed), the
+    # lateness histogram only the miss (positive lateness)
+    assert slo["slack_s"]["count"] == 2
+    assert slo["lateness_s"]["count"] == 1
+    assert slo["lateness_s"]["min"] == pytest.approx(0.05)
+
+    # counted exactly once: idle polls and re-reads never move anything
+    srv.poll(); srv.drain()
+    again = srv.stats("t")["slo"]
+    for k in ("resolved", "goodput", "deadline_misses", "no_deadline"):
+        assert again[k] == slo[k]
+
+    # the request timeline is complete and ordered
+    tl = miss.timeline()
+    assert tl["request_id"] and tl["window_id"] >= 0
+    assert tl["tenant"] == "t" and not tl["abandoned"]
+    assert tl["admitted_at"] <= tl["dispatched_at"] <= tl["resolved_at"]
+
+
+def test_ticket_abandonment_accounting(graph):
+    """A wait() timeout abandons the queued ticket: it leaves the window,
+    is never dispatched, and the per-tenant conservation closes with the
+    abandoned term — admitted == dispatched + pending + abandoned."""
+    clock = FakeClock()
+    srv = AsyncGraphServer(clock=clock, max_wait=10.0)
+    srv.add_tenant("t", graph, batch_size=64)       # nothing self-flushes
+    gone = srv.submit("t", "bfs", 0)
+    kept = srv.submit("t", "bfs", 1)
+    with pytest.raises(TimeoutError):
+        gone.wait(timeout=0.01)
+    assert gone.abandoned and not gone.done()
+    assert gone.timeline()["abandoned"]
+
+    slo = srv.stats("t")["slo"]
+    assert slo["abandoned"] == 1 and slo["wait_timeouts"] == 1
+    assert slo["pending"] == 1 and slo["dispatched"] == 0
+    assert slo["admitted"] == slo["dispatched"] + slo["pending"] \
+        + slo["abandoned"] == 2
+
+    # the drain dispatches only the survivor
+    assert srv.drain() == 1
+    assert kept.done() and not gone.done()
+    slo = srv.stats("t")["slo"]
+    assert slo["dispatched"] == 1 and slo["pending"] == 0
+    assert slo["resolved"] == 1 and slo["no_deadline"] == 1
+
+    # a second timed-out wait on the same ticket never double-counts
+    with pytest.raises(TimeoutError):
+        gone.wait(timeout=0)
+    after = srv.stats("t")["slo"]
+    assert after["wait_timeouts"] == 1 and after["abandoned"] == 1
+
+    # a resolved ticket's wait is unaffected by the abandonment path
+    assert kept.wait(timeout=0) is kept.result
+
+
+# ---------------------------------------------------------------------------
 # threaded stress: shared LRU + metrics under concurrency
 # ---------------------------------------------------------------------------
 
@@ -429,6 +515,20 @@ def test_threaded_stress_no_lost_or_torn_state():
                         st = srv.stats(t)       # deep copy: never torn
                         if st["latency"]["lru_hit_rate"] > 1.0:
                             errors.append(AssertionError(str(st)))
+                        slo = st["slo"]
+                        # SLO conservation must hold in every mid-flight
+                        # snapshot, not just at quiescence
+                        if slo["admitted"] != slo["dispatched"] \
+                                + slo["pending"] + slo["abandoned"]:
+                            errors.append(AssertionError(
+                                f"slo admission leak: {slo}"))
+                        if slo["goodput"] + slo["deadline_misses"] \
+                                + slo["no_deadline"] != slo["resolved"]:
+                            errors.append(AssertionError(
+                                f"slo resolve leak: {slo}"))
+                        if slo["resolved"] > slo["dispatched"]:
+                            errors.append(AssertionError(
+                                f"resolved ahead of dispatch: {slo}"))
                 except Exception as e:          # pragma: no cover
                     errors.append(e)
                 time.sleep(0.001)
@@ -457,3 +557,12 @@ def test_threaded_stress_no_lost_or_torn_state():
     assert sched["depth_high_water"] <= sched["max_pending"]
     cs = srv.cache.stats()
     assert cs["hits"] + cs["misses"] == cs["lookups"]
+    for t in graphs:                            # SLO ledger at quiescence
+        slo = srv.stats(t)["slo"]
+        assert slo["pending"] == 0
+        assert slo["admitted"] == slo["dispatched"] + slo["abandoned"]
+        assert slo["resolved"] == slo["dispatched"]
+        assert slo["goodput"] + slo["deadline_misses"] \
+            + slo["no_deadline"] == slo["resolved"]
+        assert slo["slack_s"]["count"] == slo["goodput"] \
+            + slo["deadline_misses"]

@@ -167,6 +167,21 @@ def test_committed_baseline_gates_dynamic_updates():
     assert ("dynamic_updates", "road/server_mutate") in rows
 
 
+def test_committed_baseline_gates_slo_openloop():
+    """The PR-10 open-loop bench: the baseline must pin the answer
+    checksum of every offered-load row (identical answers at 0.5x/1x/2x
+    are asserted in-bench, so one drifting load breaks the gate), the
+    async==sync oracle row, and the stitched-trace replay row.  Latency
+    and miss-rate fields are timing artifacts and stay ungated."""
+    data = json.loads((BENCH_DIR / "baseline.json").read_text())
+    rows = {(r["bench"], r["case"]): r for r in data["rows"]}
+    for case in ("load0.5x", "load1x", "load2x", "oracle", "stitched"):
+        key = ("slo_openloop", case)
+        assert key in rows, key
+        assert rows[key].get("checksum"), key
+    assert ("slo_openloop", "capacity") in rows
+
+
 def test_committed_baseline_gates_phase_trace():
     """The ISSUE-7 tentpole bench: the baseline must pin every traced
     family × strategy cell with a checksum (traced ≡ untraced results are

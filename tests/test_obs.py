@@ -10,6 +10,7 @@ import math
 import os
 import subprocess
 import sys
+import threading
 import tracemalloc
 
 import numpy as np
@@ -70,6 +71,79 @@ def test_tracing_context_manager_installs_and_restores():
         with trace.tracing():
             raise RuntimeError("boom")
     assert trace.active() is None
+
+
+# ---------------------------------------------------------------------------
+# trace: ambient stitching attrs (Tracer.context)
+# ---------------------------------------------------------------------------
+
+def test_ambient_context_stitches_recorded_spans():
+    """Spans recorded inside a context block inherit its attrs — live and
+    retrospective alike; explicit attrs win; nesting merges inner-most
+    first; spans outside the block are untouched."""
+    t = trace.Tracer()
+    with t.span("outside"):
+        pass
+    with t.context(window_id=3, request_ids="r1,r2"):
+        with t.span("inside", phase="kernel"):
+            pass
+        t.add_span("retro", 1.0, 2.0)
+        with t.context(window_id=4):
+            with t.span("nested"):
+                pass
+        with t.span("explicit", window_id=9):
+            pass
+    with t.span("after"):
+        pass
+
+    by = {s.name: s for s in t.spans}
+    assert "window_id" not in by["outside"].attrs
+    assert by["inside"].attrs["window_id"] == 3
+    assert by["inside"].attrs["request_ids"] == "r1,r2"
+    assert by["inside"].attrs["phase"] == "kernel"
+    assert by["retro"].attrs["window_id"] == 3      # add_span inherits too
+    assert by["nested"].attrs["window_id"] == 4     # inner context wins
+    assert by["nested"].attrs["request_ids"] == "r1,r2"   # outer still merged
+    assert by["explicit"].attrs["window_id"] == 9   # explicit span attr wins
+    assert "window_id" not in by["after"].attrs     # block closed cleanly
+
+
+def test_ambient_context_is_thread_local():
+    """Concurrent context blocks never cross-contaminate: each thread's
+    spans carry only its own ambient attrs."""
+    t = trace.Tracer()
+    barrier = threading.Barrier(2)
+
+    def worker(wid):
+        with t.context(window_id=wid):
+            barrier.wait()                  # both blocks open at once
+            with t.span(f"w{wid}"):
+                pass
+            barrier.wait()
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in (1, 2)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=30)
+    by = {s.name: s for s in t.spans}
+    assert by["w1"].attrs["window_id"] == 1
+    assert by["w2"].attrs["window_id"] == 2
+
+
+def test_ambient_context_exception_safe_and_disabled_path_unchanged():
+    t = trace.Tracer()
+    with pytest.raises(RuntimeError):
+        with t.context(a=1):
+            raise RuntimeError("boom")
+    assert t._ambient_attrs() is None       # stack popped on the way out
+    with t.span("clean"):
+        pass
+    assert "a" not in t.by_name()["clean"][0].attrs
+    # the disabled path is untouched by the ambient machinery: no tracer
+    # installed still means the shared NULL_SPAN singleton
+    assert trace.active() is None
+    assert trace.span("x", a=1) is trace.NULL_SPAN
 
 
 # ---------------------------------------------------------------------------

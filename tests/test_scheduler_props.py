@@ -11,7 +11,9 @@ step:
   there and the scheduler is polled (no starvation);
 * queued depth never exceeds ``max_pending``; over-bound submissions
   raise the typed BackpressureError and are counted — never lost;
-* every admitted ticket is dispatched exactly once (conservation).
+* every admitted ticket is dispatched exactly once (conservation);
+* the SLO ledger (SLOAccount) conserves in every snapshot and its miss
+  count is monotone in deadline tightness.
 
 Runs wherever hypothesis is installed (CI); skips cleanly elsewhere —
 the deterministic fake-clock suite in tests/test_async_server.py keeps
@@ -23,7 +25,8 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.serve.scheduler import (  # noqa: E402
-    BackpressureError, FakeClock, QueryTicket, WindowScheduler, _edf_key,
+    BackpressureError, FakeClock, QueryTicket, SLOAccount, WindowScheduler,
+    _edf_key,
 )
 
 TENANTS = [("t0", 4, 0.05), ("t1", 3, 0.02)]  # (name, batch_size, max_wait)
@@ -130,3 +133,41 @@ def test_fake_clock_rejects_time_travel(dt):
     clock = FakeClock()
     with pytest.raises(ValueError):
         clock.advance(dt)
+
+
+@settings(max_examples=60, deadline=None)
+@given(latencies=st.lists(st.floats(min_value=0.0, max_value=1.0,
+                                    allow_nan=False, allow_infinity=False),
+                          min_size=1, max_size=40),
+       b1=st.floats(min_value=0.0, max_value=1.0,
+                    allow_nan=False, allow_infinity=False),
+       b2=st.floats(min_value=0.0, max_value=1.0,
+                    allow_nan=False, allow_infinity=False))
+def test_slo_miss_count_monotone_in_deadline_tightness(latencies, b1, b2):
+    """Engine-free SLOAccount property: for the same resolution times, a
+    tighter deadline budget can only add misses — and the ledger conserves
+    at either budget (goodput + misses + no-deadline == resolved, slack
+    histogram sees exactly the deadlined tickets)."""
+    def misses(budget):
+        acct = SLOAccount()
+        for j, lat in enumerate(latencies):
+            # every 5th ticket is deadline-less: classified no_deadline,
+            # invisible to the miss count at any budget
+            ddl = None if j % 5 == 4 else budget
+            tk = QueryTicket("t", "q", 0, deadline=ddl)
+            tk.resolve({"j": j}, at=lat)
+            acct.record(tk)
+            snap = acct.snapshot()       # conserved in EVERY snapshot
+            assert snap["goodput"] + snap["deadline_misses"] \
+                + snap["no_deadline"] == snap["resolved"] == j + 1
+        snap = acct.snapshot()
+        deadlined = sum(1 for j in range(len(latencies)) if j % 5 != 4)
+        assert snap["slack_s"]["count"] == deadlined \
+            == snap["goodput"] + snap["deadline_misses"]
+        assert snap["lateness_s"]["count"] == snap["deadline_misses"]
+        if snap["deadline_misses"]:
+            assert snap["lateness_s"]["min"] > 0   # lateness is positive
+        return snap["deadline_misses"]
+
+    tight, loose = sorted((b1, b2))
+    assert misses(tight) >= misses(loose)

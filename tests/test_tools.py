@@ -254,3 +254,76 @@ def test_bench_trajectory_diff_cli(tmp_path, capsys):
                     str(tmp_path / "b.json")]) == 0
     out = capsys.readouterr().out
     assert "1 shared row(s)" in out and "+100.0%" in out
+
+
+def test_bench_trajectory_diff_defaults_and_summary(tmp_path, capsys,
+                                                    monkeypatch):
+    """With no positional points, diff picks the two newest committed
+    BENCH_PR*.json; --summary mirrors the diff into
+    $GITHUB_STEP_SUMMARY (the CI perf-trajectory step)."""
+    import json
+    bt = _load("bench_trajectory")
+    for pr, ms in ((7, 1.0), (9, 3.0), (10, 2.0)):
+        (tmp_path / f"BENCH_PR{pr}.json").write_text(json.dumps(
+            {"pr": pr, "reps": 1,
+             "rows": [{"bench": "b", "case": "c", "wall_ms": ms}]}))
+    gss = tmp_path / "summary.md"
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(gss))
+    assert bt.main(["diff", "--root", str(tmp_path), "--summary"]) == 0
+    out = capsys.readouterr().out
+    # the two newest: PR9 -> PR10 (PR7 ignored), and 3ms -> 2ms is faster
+    assert "BENCH_PR9.json -> BENCH_PR10.json" in out
+    assert "faster" in out and "-33.3%" in out
+    text = gss.read_text()
+    assert "BENCH_PR9.json" in text and "-33.3%" in text
+
+    # without --summary nothing is appended; with < 2 points it fails
+    before = gss.read_text()
+    assert bt.main(["diff", "--root", str(tmp_path)]) == 0
+    assert gss.read_text() == before
+    solo = tmp_path / "solo"
+    solo.mkdir()
+    (solo / "BENCH_PR1.json").write_text(json.dumps(
+        {"pr": 1, "reps": 1, "rows": [{"bench": "b", "case": "c"}]}))
+    assert bt.main(["diff", "--root", str(solo)]) == 1
+
+
+# ---------------------------------------------------------------------------
+# tools/slo_report.py: markdown rendering of the open-loop SLO summary
+# ---------------------------------------------------------------------------
+
+def test_slo_report_renders_curve_and_tenant_table(tmp_path, capsys,
+                                                   monkeypatch):
+    import json
+    sr = _load("slo_report")
+    doc = {"bench": "slo_openloop", "capacity_qps": 500.0,
+           "budget_ms": 100.0,
+           "curve": [
+               {"offered_x": 0.5, "offered_qps": 250.0, "n": 10,
+                "p50_ms": 5.0, "p99_ms": 9.0, "miss_rate": 0.0,
+                "goodput_rate": 1.0, "misses": 0, "abandoned": 0},
+               {"offered_x": 2.0, "offered_qps": 1000.0, "n": 10,
+                "p50_ms": 50.0, "p99_ms": 90.0, "miss_rate": 0.75,
+                "goodput_rate": 0.25, "misses": 8, "abandoned": 0}],
+           "tenants": [
+               {"tenant": "t", "case": "load2x", "admitted": 13,
+                "dispatched": 13, "resolved": 13, "goodput": 3,
+                "deadline_misses": 10, "no_deadline": 0, "abandoned": 0,
+                "worst_slack_ms": -50.5}]}
+    md = sr.render(doc)
+    assert "| 0.5x | 250.0 | 10 | 5.0 | 9.0 | 0.0% | 100.0% | 0 |" in md
+    assert "| 2x | 1000.0 | 10 | 50.0 | 90.0 | 75.0% | 25.0% | 0 |" in md
+    assert "| t | load2x | 13 | 13 | 13 | 3 | 10 | 0 | 0 | -50.5 |" in md
+    assert "**500.0 q/s**" in md and "**100.0 ms**" in md
+
+    stats = tmp_path / "slo-stats.json"
+    stats.write_text(json.dumps(doc))
+    out = tmp_path / "report.md"
+    gss = tmp_path / "summary.md"
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(gss))
+    assert sr.main([str(stats), "--out", str(out)]) == 0
+    assert out.read_text() == md
+    assert md in gss.read_text()
+    assert md in capsys.readouterr().out
+
+    assert sr.main([str(tmp_path / "absent.json")]) == 1

@@ -26,12 +26,16 @@ which is what CI uses to diff a PR against its predecessor via
 ``diff`` prints per-row timing deltas between two points: every ``*_ms``
 and ``*_per_s`` field both points share, largest regression first, with
 rows present in only one point listed at the end.  ``--threshold 0.05``
-hides fields that moved less than 5% in either direction.
+hides fields that moved less than 5% in either direction.  With no
+positional arguments it diffs the two newest committed points (what the
+CI step summary shows); ``--summary`` appends the diff as a markdown
+block to ``$GITHUB_STEP_SUMMARY`` when that variable is set.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
 import re
 import sys
@@ -176,11 +180,20 @@ def main(argv: list[str] | None = None) -> int:
     p_lat.add_argument("--before", type=int, default=None,
                        help="newest point with pr strictly below this")
     p_diff = sub.add_parser("diff")
-    p_diff.add_argument("old", help="older trajectory point (or raw dump)")
-    p_diff.add_argument("new", help="newer trajectory point (or raw dump)")
+    p_diff.add_argument("old", nargs="?", default=None,
+                        help="older trajectory point (or raw dump); "
+                             "default: second-newest committed point")
+    p_diff.add_argument("new", nargs="?", default=None,
+                        help="newer trajectory point (or raw dump); "
+                             "default: newest committed point")
+    p_diff.add_argument("--root", default=str(REPO_ROOT),
+                        help="where to look for default points")
     p_diff.add_argument("--threshold", type=float, default=0.0,
                         help="hide fields that moved less than this "
                              "fraction (e.g. 0.05 = 5%%)")
+    p_diff.add_argument("--summary", action="store_true",
+                        help="also append the diff as markdown to "
+                             "$GITHUB_STEP_SUMMARY (if set)")
     args = ap.parse_args(argv)
 
     if args.cmd == "add":
@@ -196,16 +209,35 @@ def main(argv: list[str] | None = None) -> int:
         return 0
 
     if args.cmd == "diff":
-        old_p, new_p = pathlib.Path(args.old), pathlib.Path(args.new)
+        if args.old is None or args.new is None:
+            points = series(pathlib.Path(args.root))
+            if args.new is None and args.old is not None:
+                ap.error("diff: give both points or neither")
+            if len(points) < 2:
+                print("bench_trajectory: need two committed points to "
+                      "diff by default", file=sys.stderr)
+                return 1
+            old_p, new_p = points[-2][1], points[-1][1]
+        else:
+            old_p, new_p = pathlib.Path(args.old), pathlib.Path(args.new)
         deltas, only_old, only_new = diff_rows(load_rows(old_p),
                                                load_rows(new_p))
         shared = {d[0] for d in deltas}
-        print(f"bench_trajectory: diff {old_p.name} -> {new_p.name} "
-              f"({len(shared)} shared row(s), {len(deltas)} timing "
-              f"field(s))")
-        for line in format_diff(deltas, only_old, only_new,
-                                threshold=args.threshold):
+        header = (f"bench_trajectory: diff {old_p.name} -> {new_p.name} "
+                  f"({len(shared)} shared row(s), {len(deltas)} timing "
+                  f"field(s))")
+        body = format_diff(deltas, only_old, only_new,
+                           threshold=args.threshold)
+        print(header)
+        for line in body:
             print(line)
+        summary = os.environ.get("GITHUB_STEP_SUMMARY") \
+            if args.summary else None
+        if summary:
+            with open(summary, "a") as fh:
+                fh.write(f"## Perf trajectory: {old_p.name} → "
+                         f"{new_p.name}\n\n```\n" + header + "\n"
+                         + "\n".join(body) + "\n```\n")
         return 0
 
     root = pathlib.Path(args.root)

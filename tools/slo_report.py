@@ -1,0 +1,114 @@
+"""Render the open-loop SLO characterization as a markdown report.
+
+    python tools/slo_report.py [slo-stats.json] [--out report.md]
+
+Reads the machine-readable summary benchmarks/slo_openloop.py writes
+(``$SLO_STATS_OUT``): the offered-load curve (p50/p99/miss-rate/goodput
+per multiplier) and the per-tenant SLO accounting table (admitted /
+dispatched / goodput / deadline misses / abandoned, with the worst
+observed slack).  Emits GitHub-flavoured markdown — appended to
+``$GITHUB_STEP_SUMMARY`` when that variable is set (the CI bench-smoke
+lane does this), and/or written to ``--out``; always printed to stdout.
+
+The report is presentation only: every number comes from the benchmark's
+asserted run (conservation invariants, miss-rate monotonicity and the
+answer checksums are enforced in-process there, not here).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+
+
+def _fmt(v, spec: str = ".1f") -> str:
+    if isinstance(v, bool) or not isinstance(v, (int, float)):
+        return str(v)
+    if isinstance(v, int):
+        return str(v)
+    return format(v, spec)
+
+
+def render(doc: dict) -> str:
+    """The full markdown report for one slo-stats document."""
+    lines = ["## SLO open-loop characterization",
+             "",
+             f"Saturation capacity **{_fmt(doc.get('capacity_qps', 0.0))} "
+             f"q/s**, latency budget **{_fmt(doc.get('budget_ms', 0.0))} "
+             f"ms** (absolute deadline = arrival + budget).",
+             "",
+             "### Offered-load curve",
+             "",
+             "| load | offered q/s | n | p50 ms | p99 ms | miss rate |"
+             " goodput | abandoned |",
+             "|---|---|---|---|---|---|---|---|"]
+    for row in doc.get("curve", []):
+        lines.append(
+            f"| {_fmt(row.get('offered_x', 0.0), 'g')}x "
+            f"| {_fmt(row.get('offered_qps', 0.0))} "
+            f"| {row.get('n', 0)} "
+            f"| {_fmt(row.get('p50_ms', 0.0))} "
+            f"| {_fmt(row.get('p99_ms', 0.0))} "
+            f"| {_fmt(row.get('miss_rate', 0.0), '.1%')} "
+            f"| {_fmt(row.get('goodput_rate', 0.0), '.1%')} "
+            f"| {row.get('abandoned', 0)} |")
+    lines += ["",
+              "### Per-tenant SLO accounting",
+              "",
+              "| tenant | case | admitted | dispatched | resolved |"
+              " goodput | misses | no-deadline | abandoned |"
+              " worst slack ms |",
+              "|---|---|---|---|---|---|---|---|---|---|"]
+    for t in doc.get("tenants", []):
+        lines.append(
+            f"| {t.get('tenant', '?')} "
+            f"| {t.get('case', '?')} "
+            f"| {t.get('admitted', 0)} "
+            f"| {t.get('dispatched', 0)} "
+            f"| {t.get('resolved', 0)} "
+            f"| {t.get('goodput', 0)} "
+            f"| {t.get('deadline_misses', 0)} "
+            f"| {t.get('no_deadline', 0)} "
+            f"| {t.get('abandoned', 0)} "
+            f"| {_fmt(t.get('worst_slack_ms', 0.0))} |")
+    lines += ["",
+              "Conservation (asserted in-process by the benchmark): "
+              "`admitted == dispatched + pending + abandoned` and "
+              "`goodput + misses + no-deadline == resolved`; answer "
+              "checksums are identical at every load.",
+              ""]
+    return "\n".join(lines)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("stats", nargs="?",
+                    default=os.environ.get("SLO_STATS_OUT",
+                                           "slo-stats.json"),
+                    help="slo-stats JSON from benchmarks/slo_openloop.py")
+    ap.add_argument("--out", default=None,
+                    help="also write the markdown report to this path")
+    args = ap.parse_args(argv)
+
+    path = pathlib.Path(args.stats)
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"slo_report: cannot read {path}: {e}", file=sys.stderr)
+        return 1
+
+    md = render(doc)
+    print(md)
+    if args.out:
+        pathlib.Path(args.out).write_text(md)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as fh:
+            fh.write(md + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -29,7 +29,7 @@ import compare_bench  # noqa: E402
 #: quick-mode-stable rows (the same list .github/workflows/ci.yml runs).
 SMOKE_MODULES = ("analytics,table4,pipeline_overlap,partition_balance,"
                  "dynamic_updates,merge_collectives,phase_trace,"
-                 "serving_load,roofline")
+                 "serving_load,slo_openloop,roofline")
 
 
 def run_benches(only: str, quick: bool, out: pathlib.Path) -> int:
